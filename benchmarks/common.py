@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, CSV emit."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def timeit(fn, *args, warmup=2, iters=5, **kw):
+    """Median wall time (s) of jitted fn; blocks on results."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.tree_util.tree_map(
+            lambda l: l.block_until_ready() if hasattr(l, "block_until_ready")
+            else l, r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.tree_util.tree_map(
+            lambda l: l.block_until_ready() if hasattr(l, "block_until_ready")
+            else l, r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def fft_gflops(n: int, batch: int, t_s: float) -> float:
+    """Standard 5*N*log2(N) FFT flops convention."""
+    return 5.0 * n * np.log2(max(n, 2)) * batch / t_s / 1e9
+
+
+def fft_gbytes(n: int, batch: int, t_s: float, itemsize: int = 8) -> float:
+    """2x problem size / time (the paper's bandwidth metric, §5.1.2)."""
+    return 2.0 * n * batch * itemsize / t_s / 1e9

@@ -1,0 +1,45 @@
+"""§Dry-run summary table: every (arch x shape x mesh) cell's status,
+memory/device, compile time — written to artifacts/dryrun_summary.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(art_dir: str = "artifacts/dryrun",
+        out_md: str = "artifacts/dryrun_summary.md"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    lines = ["| arch | shape | mesh | status | params | mem/dev GB "
+             "| compile_s |", "|---|---|---|---|---|---|---|"]
+    ok = skip = err = 0
+    for r in recs:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r["status"] == "ok":
+            ok += 1
+            mem = r.get("memory", {}).get("bytes_per_device", 0) / 1e9
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ok "
+                f"| {r.get('params', 0)/1e9:.1f}B | {mem:.1f} "
+                f"| {r.get('compile_s', '')} |")
+        elif r["status"] == "skipped":
+            skip += 1
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | skip: "
+                         f"{r.get('reason', '')[:40]} | | | |")
+        else:
+            err += 1
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR "
+                         f"{r.get('error', '')[:60]} | | | |")
+    header = (f"# Dry-run summary: {ok} compiled, {skip} documented skips, "
+              f"{err} errors\n\n")
+    with open(out_md, "w") as f:
+        f.write(header + "\n".join(lines) + "\n")
+    print(header.strip())
+    return ok, skip, err
+
+
+if __name__ == "__main__":
+    run()

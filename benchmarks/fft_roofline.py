@@ -1,0 +1,66 @@
+"""TPU roofline for the TurboFFT kernel itself (the paper's workload).
+
+Analytic terms from the plan (exact op counts of the stage GEMMs) — the FFT
+is memory-bound on TPU exactly as on GPU (paper §5.1.2 reports 90% of peak
+memory bandwidth; the A100 balance point is ~13 fp32 FLOP/B vs our stage
+intensity ~80 FLOP/B on v5e whose balance is 240 FLOP/B bf16).
+
+Also quantifies the fused-ABFT roofline cost: checksum dots add ~0.6%
+compute and exactly 0 HBM bytes (they read VMEM-resident tiles), so the
+co-design thesis — fault tolerance below the memory roofline is free — holds
+on TPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fft.plan import make_plan
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def fft_terms(n: int, itemsize: int = 8):
+    """(flops/signal, hbm bytes/signal, passes) for the planned FFT."""
+    plan = make_plan(n)
+    # Each stage transforms a factor-length-F signal by contracting with W_r
+    # (4 real matmuls, 2*F*r each per signal) + a twiddle multiply
+    # (6 flops/elem); a pass applies its factor's stages across all N
+    # elements (N/F signals of length F).
+    flops = 0.0
+    for f, stages in zip(plan.kernel_factors, plan.stages):
+        reps = n // f
+        for st in stages:
+            flops += reps * (8.0 * f * st.radix + 6.0 * f)
+    bytes_hbm = 2.0 * n * itemsize * plan.num_passes  # read+write per pass
+    return flops, bytes_hbm, plan.num_passes
+
+
+def run(smoke: bool = True):
+    rows = []
+    for ln in ([10, 13, 17, 23] if smoke else list(range(6, 28))):
+        n = 1 << ln
+        flops, byts, passes = fft_terms(n)
+        compute_s = flops / PEAK_FLOPS
+        memory_s = byts / HBM_BW
+        bound = max(compute_s, memory_s)
+        eff_bw = byts / bound / 1e9
+        frac_bw = (memory_s / bound)
+        # fused ABFT deltas (per signal): left checksums = 2 complex dots
+        # in + out = 2 * 8N flops, 0 extra HBM bytes; right-side adds
+        # elementwise accumulate 8N flops, 0 bytes, 1/(bs*T) amortized emit
+        abft_flops = 24.0 * n
+        abft_overhead = abft_flops / flops
+        emit(f"fft_roofline_N2^{ln}", 0.0,
+             f"passes={passes};intensity={flops / byts:.0f}F/B;"
+             f"bound={'memory' if memory_s >= compute_s else 'compute'};"
+             f"peakBW%={100 * frac_bw:.0f};abft_flops=+{100 * abft_overhead:.1f}%;"
+             f"abft_bytes=+0%")
+        rows.append((n, flops, byts, abft_overhead))
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=False)

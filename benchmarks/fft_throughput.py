@@ -1,0 +1,51 @@
+"""Paper Fig. 1 / 10-14: TurboFFT vs the platform library (jnp.fft = the
+cuFFT analogue) over the (signal length, batch) grid, FP32 + FP64.
+
+CPU wall time is a proxy (TPU perf is the §Roofline analysis); the grid and
+the relative-overhead heatmap methodology match the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as tfft
+
+from .common import emit, fft_gbytes, fft_gflops, timeit
+
+
+def grid(smoke: bool = True):
+    if smoke:
+        return [(10, 8), (12, 8), (14, 2), (17, 1)], ["complex64"]
+    return ([(ln, b) for ln in range(6, 23, 2) for b in (1, 16, 256)],
+            ["complex64", "complex128"])
+
+
+def run(smoke: bool = True):
+    cells, dtypes = grid(smoke)
+    rng = np.random.default_rng(0)
+    turbo = jax.jit(tfft.fft)
+    ref = jax.jit(jnp.fft.fft)
+    rows = []
+    for dt in dtypes:
+        for ln, b in cells:
+            n = 1 << ln
+            if b * n > (1 << 24):
+                b = max(1, (1 << 24) // n)
+            x = (rng.standard_normal((b, n)) +
+                 1j * rng.standard_normal((b, n))).astype(dt)
+            xj = jnp.asarray(x)
+            t_t = timeit(turbo, xj)
+            t_r = timeit(ref, xj)
+            ratio = t_r / t_t
+            emit(f"fft_{dt[-2:]}_N2^{ln}_b{b}_turbo", t_t * 1e6,
+                 f"{fft_gflops(n, b, t_t):.2f}GF/s;"
+                 f"{fft_gbytes(n, b, t_t):.2f}GB/s;vs_platform={ratio:.2f}x")
+            rows.append((dt, ln, b, t_t, t_r))
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=False)

@@ -1,0 +1,21 @@
+"""Paper Table 1: kernel-parameter table produced by the plan 'codegen'."""
+from __future__ import annotations
+
+from repro.core.fft.plan import make_plan
+
+from .common import emit
+
+
+def run(smoke: bool = True):
+    sizes = [10, 17, 23] if smoke else list(range(3, 30, 2)) + [10, 17, 23]
+    out = []
+    for ln in sorted(set(sizes)):
+        p = make_plan(1 << ln, batch=64)
+        emit(f"plan_N2^{ln}", 0.0,
+             f"passes={p.num_passes};{p.describe().replace(',', ';')}")
+        out.append(p)
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke=False)

@@ -1,0 +1,53 @@
+"""Paper Fig. 15: stepwise optimization ladder.
+
+v0: naive O(N^2) DFT-as-GEMV          (paper's conceptual baseline)
+v1: radix-2 Stockham                  (paper's TurboFFT-v0: log2 N stages)
+v2: mixed-radix, MXU-radix <=128      (architecture-aware stage choice)
+v3: full plan: multi-pass + tuned bs  (kernel-parameter selection)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as tfft
+
+from .common import emit, fft_gflops, timeit
+
+
+def run(smoke: bool = True):
+    rng = np.random.default_rng(1)
+    n_small = 1 << 10
+    b = 4 if smoke else 64
+    x_small = jnp.asarray((rng.standard_normal((b, n_small)) +
+                           1j * rng.standard_normal((b, n_small))
+                           ).astype(np.complex64))
+    ladder = [
+        ("v0_naive_dft", jax.jit(tfft.naive_dft), x_small, n_small),
+        ("v1_radix2", jax.jit(tfft.radix2_fft), x_small, n_small),
+        ("v2_mixed_radix", jax.jit(tfft.block_fft_stages), x_small, n_small),
+    ]
+    n_large = 1 << (14 if smoke else 20)
+    x_large = jnp.asarray((rng.standard_normal((2, n_large)) +
+                           1j * rng.standard_normal((2, n_large))
+                           ).astype(np.complex64))
+    ladder.append(("v3_full_plan", jax.jit(tfft.fft), x_large, n_large))
+
+    prev = None
+    out = []
+    for name, fn, x, n in ladder:
+        t = timeit(fn, x)
+        gf = fft_gflops(n, x.shape[0], t)
+        # v3 runs a different (multi-pass-regime) size; compare via GF/s only
+        speedup = ("" if prev is None or name == "v3_full_plan"
+                   else f";vs_prev={prev / t:.2f}x")
+        emit(f"stepwise_{name}_N{n}", t * 1e6, f"{gf:.2f}GF/s{speedup}")
+        prev = t
+        out.append((name, t, gf))
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke=False)

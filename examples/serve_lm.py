@@ -1,0 +1,8 @@
+"""Batched greedy serving with KV caches (decode path of the dry-run).
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 32
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

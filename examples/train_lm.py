@@ -1,0 +1,24 @@
+"""End-to-end training driver: train an LM on the synthetic pipeline for a
+few hundred steps with checkpoint/restart + FT hooks.
+
+CPU-sized smoke (what EXPERIMENTS.md records):
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60
+
+The ~100M-parameter preset (same code path, longer on CPU):
+
+    PYTHONPATH=src python examples/train_lm.py --preset lm100m --steps 300 \
+        --batch 8 --seq 512
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "gemma3-1b"] + argv
+    if "--preset" not in argv:
+        argv += ["--preset", "tiny"]
+    sys.argv = [sys.argv[0]] + argv
+    main()

@@ -1,0 +1,11 @@
+"""repro: TurboFFT-on-TPU — fault-tolerant FFT + LM training/serving framework.
+
+FP64 (complex128) support is a first-class paper feature (the paper evaluates
+both FP32 and FP64), so x64 is enabled globally. All model code uses explicit
+float32/bfloat16 dtypes and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,61 @@
+"""Config registry: one module per assigned architecture + the paper's own
+FFT workload. ``get_config(name)`` returns the full ModelConfig;
+``get_smoke_config(name)`` returns the reduced same-family config used by CPU
+smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import (ModelConfig, ParallelConfig, RunConfig, ShapeConfig,
+                   SHAPES)
+
+ARCHS = [
+    "qwen15_110b",
+    "phi3_medium_14b",
+    "phi4_mini_3p8b",
+    "gemma3_1b",
+    "internvl2_1b",
+    "xlstm_350m",
+    "deepseek_v3_671b",
+    "llama4_maverick",
+    "recurrentgemma_2b",
+    "whisper_base",
+]
+
+# canonical ids as assigned (hyphens) -> module names
+_ALIASES = {
+    "qwen1.5-110b": "qwen15_110b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "gemma3-1b": "gemma3_1b",
+    "internvl2-1b": "internvl2_1b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-base": "whisper_base",
+    "turbofft": "turbofft_bench",
+}
+
+
+def _module(name: str):
+    mod = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def all_arch_names() -> list[str]:
+    return list(ARCHS)
+
+
+__all__ = ["ModelConfig", "ParallelConfig", "RunConfig", "ShapeConfig",
+           "SHAPES", "ARCHS", "get_config", "get_smoke_config",
+           "all_arch_names"]

@@ -1,0 +1,1 @@
+"""Core: the paper's contribution — FFT library + two-sided ABFT + FT runtime."""

@@ -1,0 +1,100 @@
+"""Two-sided ABFT for GEMM — the paper's scheme off the DFT special case.
+
+The paper derives its ABFT from the GEMV view of the DFT (§2.2.2): W is a
+*fixed, known* matrix, so the left encoding ``e1^T W`` is free to precompute.
+A neural-network linear layer is the same situation — W is the weight matrix,
+X the activations. This module protects ``Y = X @ W`` for every dense layer
+of the assigned architectures (``models.layers.FTLinear``):
+
+    left  (detect):  s_in  = (X e_rows?) — we use the batch side:
+                     per-tile  (e1^T X) W  vs  e1^T Y   over the batch axis,
+    right (correct): X (W e2) vs Y e2 — reduction over features gives the
+                     correction for a corrupted *row* (token) of Y.
+
+Under SEU, detection costs two rank-1 GEMVs per tile and correction needs no
+recomputation — delayed batched correction identical to the FFT case.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .encoding import EPS
+
+__all__ = ["ft_matmul", "ft_dot_stats"]
+
+
+def _loc_vec(n: int, dtype) -> jax.Array:
+    return jnp.arange(1, n + 1, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "with_correction"))
+def ft_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    threshold: float = 1e-3,
+    with_correction: bool = True,
+    inject: jax.Array | None = None,
+):
+    """Checked ``y = x @ w`` for 2-D ``x`` (tokens, d_in) @ (d_in, d_out).
+
+    Returns ``(y, stats)`` where stats is a dict with ``flagged`` (scalar
+    count), ``score`` (max divergence), both float32. ``inject`` is an
+    optional (3,) array (row, col, eps) adding eps to y[row, col] *after* the
+    product — simulating an SEU in the MAC units.
+
+    The checksums ride in float32 regardless of the compute dtype (bf16
+    accumulation noise would swamp detection otherwise).
+    """
+    t, _ = x.shape
+    _, d_out = w.shape
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    # left: column checksums over the token axis (detect which column group)
+    e2x = jnp.sum(xf, axis=0)              # e2^T X   (d_in,)
+    e3x = _loc_vec(t, jnp.float32) @ xf    # e3^T X   (d_in,)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if inject is not None:
+        row = inject[0].astype(jnp.int32)
+        col = inject[1].astype(jnp.int32)
+        y = y.at[row, col].add(inject[2].astype(y.dtype))
+    # predicted output checksums (rank-1 GEMVs against the small side)
+    p2 = e2x @ wf                          # e2^T X W (d_out,)
+    p3 = e3x @ wf
+    o2 = jnp.sum(y.astype(jnp.float32), axis=0)
+    o3 = _loc_vec(t, jnp.float32) @ y.astype(jnp.float32)
+    d2 = p2 - o2                           # == -eps at the corrupted column
+    d3 = p3 - o3
+    scale = jnp.sqrt(jnp.mean(o2 * o2)) + EPS
+    score = jnp.sqrt(jnp.mean(d2 * d2)) / scale
+    flagged = score > threshold
+    if with_correction:
+        num = jnp.sum(d3 * d2)
+        den = jnp.sum(d2 * d2) + EPS
+        row_hat = jnp.clip(jnp.round(num / den).astype(jnp.int32) - 1, 0, t - 1)
+        y = jnp.where(flagged,
+                      y.at[row_hat].add(d2.astype(y.dtype)), y)
+    stats = {
+        "flagged": flagged.astype(jnp.float32),
+        "score": score.astype(jnp.float32),
+    }
+    return y.astype(x.dtype), stats
+
+
+def ft_dot_stats(stats_tree) -> dict:
+    """Aggregate FTLinear stats pytree into run-level counters."""
+    leaves = jax.tree_util.tree_leaves(stats_tree)
+    if not leaves:
+        return {"ft_flagged": jnp.zeros(()), "ft_max_score": jnp.zeros(())}
+    flagged = leaves[::2]   # dict key order: 'flagged' < 'score'
+    scores = leaves[1::2]
+    return {
+        "ft_flagged": jnp.sum(jnp.stack([jnp.sum(l) for l in flagged])),
+        "ft_max_score": jnp.max(jnp.stack([jnp.max(l) for l in scores])),
+    }

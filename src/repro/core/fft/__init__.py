@@ -1,0 +1,15 @@
+"""TurboFFT core: plans, factor/twiddle tables, Stockham FFT, large-N driver."""
+from . import factors
+from .plan import Plan, StagePlan, make_plan, block_radices, PLAN_TABLE
+from .stockham import (fft, ifft, fft_with_plan, block_fft_stages, naive_dft,
+                       radix2_fft)
+from .large import fft_large
+
+__all__ = [
+    "factors", "Plan", "StagePlan", "make_plan", "block_radices", "PLAN_TABLE",
+    "fft", "ifft", "fft_with_plan", "block_fft_stages", "naive_dft",
+    "radix2_fft", "fft_large",
+]
+from .extensions import rfft, irfft, fft2, ifft2, ft_ifft  # noqa: E402
+
+__all__ += ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]

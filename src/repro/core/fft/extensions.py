@@ -1,0 +1,81 @@
+"""FFT library extensions beyond the paper's C2C core: real-input transform,
+2-D transform, and FT-protected inverse via conjugation.
+
+These compose the validated building blocks (no new numerics):
+  rfft:  real -> half-spectrum via one C2C FFT of half length (the classic
+         packing trick: x_even + i*x_odd),
+  fft2:  row FFT -> column FFT (the kernel-level cube applied in 2-D),
+  ft_ifft: ifft(x) = conj(fft(conj(x))) / N — runs the *forward* protected
+         kernel, so the two-sided ABFT covers the inverse transform too.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .stockham import fft as _fft, ifft as _ifft
+
+__all__ = ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
+
+
+def rfft(x: jax.Array) -> jax.Array:
+    """Real-input FFT over the last axis -> (..., N/2+1) half spectrum."""
+    x = jnp.asarray(x)
+    n = x.shape[-1]
+    assert n % 2 == 0, "even length required"
+    half = n // 2
+    # pack: z[k] = x[2k] + i x[2k+1]; one half-length C2C transform
+    z = x[..., 0::2] + 1j * x[..., 1::2]
+    zf = _fft(z.astype(jnp.complex64 if x.dtype != jnp.float64
+                       else jnp.complex128))
+    k = jnp.arange(half + 1)
+    w = jnp.exp(-2j * np.pi * k / n).astype(zf.dtype)
+    zf_ext = jnp.concatenate([zf, zf[..., :1]], axis=-1)      # Z[half] = Z[0]
+    zconj = jnp.conj(zf_ext[..., ::-1])                        # Z*[half-k]
+    even = 0.5 * (zf_ext + zconj)
+    odd = -0.5j * (zf_ext - zconj)
+    return even + w * odd
+
+
+def irfft(y: jax.Array, n: int | None = None) -> jax.Array:
+    """Inverse of rfft: (..., N/2+1) half spectrum -> (..., N) real."""
+    y = jnp.asarray(y)
+    if n is None:
+        n = 2 * (y.shape[-1] - 1)
+    # reconstruct the full spectrum by Hermitian symmetry, ifft, take real
+    tail = jnp.conj(y[..., 1:-1][..., ::-1])
+    full = jnp.concatenate([y, tail], axis=-1)
+    return jnp.real(_ifft(full))[..., :n]
+
+
+def fft2(x: jax.Array) -> jax.Array:
+    """2-D FFT over the last two axes (row pass then column pass)."""
+    y = _fft(x)                      # rows
+    y = jnp.swapaxes(y, -1, -2)
+    y = _fft(y)                      # columns
+    return jnp.swapaxes(y, -1, -2)
+
+
+def ifft2(x: jax.Array) -> jax.Array:
+    y = _ifft(x)
+    y = jnp.swapaxes(y, -1, -2)
+    y = _ifft(y)
+    return jnp.swapaxes(y, -1, -2)
+
+
+def ft_ifft(x: jax.Array, **ft_kwargs):
+    """Fault-tolerant inverse FFT via conjugation around the protected
+    forward kernel: ifft(x) = conj(fft(conj(x))) / N. Returns the same
+    FTFFTResult as ops.ft_fft, with y already conjugated/normalized."""
+    from repro.kernels import ops
+
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    res = ops.ft_fft(jnp.conj(x), **ft_kwargs)
+    y = jnp.conj(res.y) / n
+    import dataclasses
+
+    return dataclasses.replace(res, y=y)

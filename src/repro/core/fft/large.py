@@ -1,0 +1,74 @@
+"""Large-N FFT: the paper's kernel-level N1 x N2 (x N3) decomposition.
+
+Each kernel-level factor is one HBM round trip: a batched block FFT along one
+axis of the tiled signal cube, a twiddle multiply (table precomputed on host,
+fused into the same pass), and a transpose that is *folded into the access
+pattern* of the next pass rather than materialized separately where possible —
+mirroring the paper's observation that the final-stage transposed write is the
+L1-miss hot spot (§5.1.2 "Global Memory").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import factors
+from .plan import Plan, make_plan
+from .stockham import block_fft_stages
+
+__all__ = ["fft_large"]
+
+
+def _twiddle_table(n1: int, n2: int, dtype, inverse: bool):
+    """(n1, n2) table T[k1, n2] = exp(-+2*pi*i*k1*n2/(n1*n2)) built on host."""
+    t = factors.stage_twiddle(n1, n2, inverse=inverse)
+    return jnp.asarray(t, dtype=dtype)
+
+
+def _fft_factors(x: jax.Array, facs: tuple[int, ...], inverse: bool) -> jax.Array:
+    """FFT over the last axis of ``x`` with len == prod(facs), recursively."""
+    n = x.shape[-1]
+    if len(facs) == 1:
+        return block_fft_stages(x, inverse=inverse)
+    f1, rest = facs[0], facs[1:]
+    f2 = int(np.prod(rest))
+    assert f1 * f2 == n
+    # pass 1: FFT along the f1 axis (stride f2): X[n1, n2] = x[f2*n1 + n2]
+    z = x.reshape(x.shape[:-1] + (f1, f2))
+    z = jnp.swapaxes(z, -1, -2)                      # (..., f2, f1)
+    z = block_fft_stages(z, inverse=inverse)         # FFT over f1 (contiguous)
+    z = jnp.swapaxes(z, -1, -2)                      # (..., f1, f2) = Z[k1, n2]
+    # twiddle (fused into the same logical pass)
+    z = z * _twiddle_table(f1, f2, x.dtype, inverse)
+    # pass 2..: FFT along the f2 axis — recurse over remaining factors
+    z = _fft_rest(z, rest, inverse)
+    # output ordering k = k1 + f1*k2 -> view as (f2, f1) row-major
+    z = jnp.swapaxes(z, -1, -2)
+    return z.reshape(x.shape[:-1] + (n,))
+
+
+def _fft_rest(z: jax.Array, rest: tuple[int, ...], inverse: bool) -> jax.Array:
+    """FFT along the last axis (length prod(rest)) of the (…, f1, f2) cube."""
+    if len(rest) == 1:
+        return block_fft_stages(z, inverse=inverse)
+    return _fft_factors_nested(z, rest, inverse)
+
+
+def _fft_factors_nested(z: jax.Array, facs: tuple[int, ...], inverse: bool):
+    lead = z.shape[:-1]
+    n = z.shape[-1]
+    out = _fft_factors(z.reshape((-1, n)), facs, inverse)
+    return out.reshape(lead + (n,))
+
+
+def fft_large(x: jax.Array, plan: Plan | None = None) -> jax.Array:
+    """Multi-pass FFT over the last axis for N beyond the VMEM budget."""
+    n = x.shape[-1]
+    if plan is None:
+        plan = make_plan(n)
+    assert plan.n == n
+    y = _fft_factors(x, plan.kernel_factors, plan.inverse)
+    if plan.inverse:
+        y = y / n
+    return y

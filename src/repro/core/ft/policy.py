@@ -1,0 +1,62 @@
+"""Fault-tolerance policy + run-level FT runtime statistics.
+
+The policy object is part of every run config (``configs.base.FTConfig``
+references it): it decides what is protected (FFT ops, linear layers), the
+detection threshold, the transaction count, and the checkpoint cadence — the
+three-legged stool from the paper's fault model: ABFT for compute SEUs, ECC
+for memory (assumed), checkpoint/restart for fail-stop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FTPolicy", "FTStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FTPolicy:
+    # ABFT (compute soft errors)
+    protect_fft: bool = True
+    protect_linears: bool = False
+    threshold: float = 1e-4          # detection threshold delta (ROC-tuned)
+    transactions: int = 4            # multi-transaction group size
+    per_signal: bool = False         # thread-level checksums on top
+    encoding: str = "wang"
+    # fail-stop (checkpoint/restart)
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    # numerical guards for training
+    skip_nonfinite_updates: bool = True
+
+    def kernel_kwargs(self) -> dict:
+        return dict(transactions=self.transactions,
+                    per_signal=self.per_signal,
+                    encoding=self.encoding,
+                    threshold=self.threshold)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FTStats:
+    """Device-side counters threaded through train/serve steps."""
+
+    detected: jax.Array
+    corrected: jax.Array
+    max_score: jax.Array
+    skipped_updates: jax.Array
+
+    @classmethod
+    def zeros(cls) -> "FTStats":
+        z = jnp.zeros((), jnp.float32)
+        return cls(detected=z, corrected=z, max_score=z, skipped_updates=z)
+
+    def merge(self, other: "FTStats") -> "FTStats":
+        return FTStats(
+            detected=self.detected + other.detected,
+            corrected=self.corrected + other.corrected,
+            max_score=jnp.maximum(self.max_score, other.max_score),
+            skipped_updates=self.skipped_updates + other.skipped_updates,
+        )

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+stockham.py       -- radix-<=128 MXU block FFT (BlockSpec VMEM tiling)
+stockham_abft.py  -- + fused two-sided ABFT, multi-transaction accumulation
+ft_matmul.py      -- ABFT-protected tiled GEMM (paper's scheme generalized)
+ops.py            -- jit'd public wrappers (fft / ifft / ft_fft / ft_matmul)
+ref.py            -- pure-jnp oracles
+"""
+from . import ops, ref
+from .ops import fft, ifft, ft_fft, FTFFTResult
+
+__all__ = ["ops", "ref", "fft", "ifft", "ft_fft", "FTFFTResult"]

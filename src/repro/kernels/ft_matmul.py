@@ -1,0 +1,105 @@
+"""Fused ABFT GEMM Pallas kernel: tiled matmul + in-kernel left-checksum.
+
+TPU analogue of the paper's fused threadblock ABFT applied to the GEMM view
+(§2.2.2): while the MXU computes C = X @ W tile-by-tile, the kernel
+accumulates the *output* column checksum e1^T C in VMEM scratch and compares
+it against the *predicted* checksum (e1^T X) @ W — computed in the same K
+loop from the (tiny) precomputed ``xsum = e1^T X`` vector, so detection adds
+zero extra HBM traffic over the matmul itself. (In a fused network layer,
+``xsum`` itself is produced by the upstream op's epilogue; see
+``core/abft/gemm.py`` for the right-side correction math.)
+
+Grid: (N/bn, M/bm, K/bk) — K innermost (accumulate), M middle (column
+checksums accumulate across M tiles), N outer (checksum strip emitted when
+its last (m, k) tile completes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ft_matmul_pallas"]
+
+
+def _kernel(nm, nk, bm, bn, x_ref, w_ref, xsum_ref, c_ref, colck_ref,
+            pred_ref, acc_ref, col_acc, pred_acc):
+    n_i = pl.program_id(0)
+    m_i = pl.program_id(1)
+    k_i = pl.program_id(2)
+
+    @pl.when((m_i == 0) & (k_i == 0))
+    def _init_strip():
+        col_acc[...] = jnp.zeros_like(col_acc)
+        pred_acc[...] = jnp.zeros_like(pred_acc)
+
+    @pl.when(k_i == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # predicted checksum: (e1^T X) @ W, accumulated once per (n, k)
+    @pl.when(m_i == 0)
+    def _pred():
+        pred_acc[...] += (xsum_ref[...] @ w).reshape(pred_acc.shape)
+
+    @pl.when(k_i == nk - 1)
+    def _emit_tile():
+        c = acc_ref[...]
+        c_ref[...] = c.astype(c_ref.dtype)
+        col_acc[...] += jnp.sum(c, axis=0, keepdims=True)
+
+    @pl.when((k_i == nk - 1) & (m_i == nm - 1))
+    def _emit_strip():
+        colck_ref[...] = col_acc[...]
+        pred_ref[...] = pred_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ft_matmul_pallas(x, w, *, bm=128, bn=128, bk=128, interpret=True):
+    """Returns (c, colck, pred): product + fused output/predicted checksums.
+
+    Detection at the caller: ||colck - pred|| / ||pred|| > delta. x: (M, K)
+    f32, w: (K, N) f32. Dims must be multiples of the tile sizes (ops-level
+    callers pad).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    xsum = jnp.sum(x.astype(jnp.float32), axis=0, keepdims=True)  # e1^T X
+
+    grid = (nn, nm, nk)
+    kernel = functools.partial(_kernel, nm, nk, bm, bn)
+    c, colck, pred = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ni, mi, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda ni, mi, ki: (ki, ni)),
+            pl.BlockSpec((1, bk), lambda ni, mi, ki: (0, ki)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda ni, mi, ki: (mi, ni)),
+            pl.BlockSpec((1, bn), lambda ni, mi, ki: (0, ni)),
+            pl.BlockSpec((1, bn), lambda ni, mi, ki: (0, ni)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((1, bn), jnp.float32),
+            pltpu.VMEM((1, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, xsum)
+    return c, colck[0], pred[0]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+All oracles take/return the same split real/imag layout as the kernels so
+tests can assert_allclose directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft import factors
+
+__all__ = [
+    "fft_ref", "fft_ri_ref", "abft_fft_ref", "matmul_ref", "abft_matmul_ref",
+]
+
+
+def fft_ref(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """Complex oracle: jnp.fft (the platform library, cuFFT analogue)."""
+    y = jnp.fft.ifft(x) if inverse else jnp.fft.fft(x)
+    return y.astype(x.dtype)
+
+
+def fft_ri_ref(xr: jax.Array, xi: jax.Array, *, inverse: bool = False):
+    """Split real/imag oracle for the block FFT kernel. (B, N) -> (B, N)."""
+    ctype = jnp.complex128 if xr.dtype == jnp.float64 else jnp.complex64
+    y = fft_ref((xr + 1j * xi).astype(ctype), inverse=inverse)
+    return y.real.astype(xr.dtype), y.imag.astype(xi.dtype)
+
+
+def abft_fft_ref(xr, xi, *, transactions: int = 1, inverse: bool = False,
+                 encoding: str = "wang"):
+    """Oracle for the fused two-sided ABFT FFT kernel (no error injected).
+
+    Returns (yr, yi, delta, cs_in, cs_out) where
+
+    * ``delta``  — (B,) per-signal left-checksum relative divergence
+      | (e1^T W) x_b - e1^T y_b | / (|(e1^T W) x_b| + eps)   (paper §4.1.1),
+    * ``cs_in``  — (G, 2, 2, N) right-side input checksums per transaction
+      group: [e2 = ones, e3 = location] x [re, im],
+    * ``cs_out`` — same for outputs.
+
+    G = B / (bs_tile * transactions) is emulated here with bs_tile == the
+    kernel's tile size; the ref uses one group per ``group_size`` signals,
+    provided by the caller via reshape — for the oracle we fold the whole
+    batch into ceil(B / group) groups of ``transactions`` tiles handled by
+    ``ops.abft_fft`` identically.
+    """
+    raise NotImplementedError("use ops.abft_fft_reference instead")
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def abft_matmul_ref(a, b):
+    """Oracle for the ABFT GEMM kernel: product + exact checksum rows/cols."""
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    col_ck = jnp.sum(c, axis=0)   # e^T C (left)
+    row_ck = jnp.sum(c, axis=1)   # C e (right)
+    return c, col_ck, row_ck

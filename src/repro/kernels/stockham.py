@@ -1,0 +1,164 @@
+"""Pallas TPU block FFT kernel — radix-<=128 Stockham, VMEM-resident.
+
+TPU adaptation of the paper's threadblock-level FFT (§3.1): a grid tile loads
+``(bs, N)`` signals HBM->VMEM, runs the plan's mixed-radix stages entirely in
+VMEM, and stores back — one "transaction" in the paper's vocabulary. Each
+stage contracts with a small DFT factor matrix, so stage compute lands on the
+MXU (radix 128 fills the systolic contraction dimension exactly); twiddle
+tables are precomputed host-side (no in-kernel trigonometry, paper §3.1
+"twiddling factor table").
+
+Complex data is carried as split real/imag float arrays: TPU Pallas has no
+complex dtype, and the split layout is also what keeps lanes 128-aligned
+("padding-free" in TPU terms: no relayout-inducing interleaved complex).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fft import factors
+from repro.core.fft.plan import Plan, StagePlan, make_plan
+
+__all__ = ["block_fft_pallas", "stage_consts", "fft_stages_value"]
+
+
+def _cmul(ar, ai, br, bi):
+    """(ar+i*ai) * (br+i*bi) elementwise."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _cmatmul(wr, wi, xr, xi):
+    """Complex contraction einsum('kr,...rm->...km') as 4 real MXU matmuls."""
+    f32 = jnp.float32 if xr.dtype != jnp.float64 else jnp.float64
+    def mm(w, x):
+        return jnp.einsum("kr,...rm->...km", w, x,
+                          preferred_element_type=f32).astype(xr.dtype)
+    return mm(wr, xr) - mm(wi, xi), mm(wr, xi) + mm(wi, xr)
+
+
+def stage_consts(stages: Sequence[StagePlan], dtype=np.float32, *,
+                 inverse: bool = False):
+    """Host-side constant tables for one block plan: per-stage (Wr, Wi[, Tr, Ti])."""
+    consts: list[np.ndarray] = []
+    layout: list[bool] = []  # has_twiddle per stage
+    for st in stages:
+        wr, wi = factors.dft_matrix_ri(st.radix, dtype, inverse=inverse)
+        consts += [wr, wi]
+        if st.m > 1:
+            tr, ti = factors.stage_twiddle_ri(st.radix, st.m, dtype,
+                                              inverse=inverse)
+            consts += [tr, ti]
+            layout.append(True)
+        else:
+            layout.append(False)
+    return consts, tuple(layout)
+
+
+def fft_stages_value(xr, xi, stages: Sequence[StagePlan], consts, layout):
+    """Run the mixed-radix stages on VMEM-resident values (used by kernels).
+
+    ``consts`` is the flat list from :func:`stage_consts` (values, not refs).
+    Mirrors ``core.fft.stockham._fft_recursive`` in split real/imag form.
+    """
+    ci = 0
+
+    def rec(zr, zi, si):
+        nonlocal ci
+        if si == len(stages):
+            return zr, zi
+        st = stages[si]
+        r, m = st.radix, st.m
+        lead = zr.shape[:-1]
+        zr = zr.reshape(lead + (r, m))
+        zi = zi.reshape(lead + (r, m))
+        wr, wi = consts[ci], consts[ci + 1]
+        ci += 2
+        ar, ai = _cmatmul(wr, wi, zr, zi)
+        if layout[si]:
+            tr, ti = consts[ci], consts[ci + 1]
+            ci += 2
+            ar, ai = _cmul(ar, ai, tr, ti)
+            ar, ai = rec(ar, ai, si + 1)  # FFT along the trailing m axis
+        else:
+            assert m == 1
+        # output ordering k = k1 + r*k2: transpose (r, m) -> (m, r)
+        ar = jnp.swapaxes(ar, -1, -2).reshape(lead + (r * m,))
+        ai = jnp.swapaxes(ai, -1, -2).reshape(lead + (r * m,))
+        return ar, ai
+
+    return rec(xr, xi, 0)
+
+
+def _fft_kernel(stages, layout, n_const, xr_ref, xi_ref, *rest):
+    const_refs = rest[:n_const]
+    yr_ref, yi_ref = rest[n_const:]
+    consts = [c[...] for c in const_refs]
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    yr, yi = fft_stages_value(xr, xi, stages, consts, layout)
+    yr_ref[...] = yr
+    yi_ref[...] = yi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "bs", "interpret", "inverse"),
+)
+def block_fft_pallas(
+    xr: jax.Array,
+    xi: jax.Array,
+    *,
+    plan: Plan | None = None,
+    bs: int | None = None,
+    inverse: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched single-pass FFT: (B, N) split re/im -> (B, N) split re/im.
+
+    ``B`` must be divisible by the tile size ``bs`` (ops.py pads). N must fit
+    a single VMEM pass (``plan.num_passes == 1``); larger sizes are composed
+    by ``ops.fft`` at the JAX level (the paper's kernel-level N1xN2xN3).
+    """
+    b, n = xr.shape
+    if plan is None:
+        plan = make_plan(n, batch=b, itemsize=xr.dtype.itemsize,
+                         inverse=inverse)
+    assert plan.num_passes == 1, plan.describe()
+    stages = plan.stages[0]
+    if bs is None:
+        bs = min(plan.bs, b)
+    assert b % bs == 0, (b, bs)
+
+    np_dtype = np.float64 if xr.dtype == jnp.float64 else np.float32
+    consts, layout = stage_consts(stages, np_dtype, inverse=inverse)
+    const_arrays = [jnp.asarray(c) for c in consts]
+
+    grid = (b // bs,)
+    x_spec = pl.BlockSpec((bs, n), lambda i: (i, 0))
+    const_specs = [
+        pl.BlockSpec(c.shape, lambda i: (0,) * c.ndim) for c in const_arrays
+    ]
+    out_specs = [x_spec, x_spec]
+    kernel = functools.partial(_fft_kernel, stages, layout, len(const_arrays))
+    yr, yi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec] + const_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), xr.dtype),
+            jax.ShapeDtypeStruct((b, n), xi.dtype),
+        ],
+        interpret=interpret,
+    )(xr, xi, *const_arrays)
+    if inverse:
+        scale = jnp.asarray(1.0 / n, dtype=xr.dtype)
+        yr, yi = yr * scale, yi * scale
+    return yr, yi

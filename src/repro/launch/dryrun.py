@@ -1,0 +1,443 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory / cost / collective analyses.
+
+This is how the distribution config is proven coherent without hardware:
+``.lower().compile()`` must succeed for every cell on the 16x16 (256-chip)
+pod mesh AND the 2x16x16 (512-chip) multi-pod mesh. Failures (sharding
+mismatch, OOM at compile, unsupported collective) are bugs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import ParallelConfig, RunConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, count_params, model_flops_per_token
+from repro.parallel import batch_specs, cache_specs, dp_axes, param_specs
+from repro.train import make_prefill_step, make_serve_step, make_train_step
+
+# cells skipped with documented reasons (DESIGN.md §Arch-applicability)
+SKIPS = {
+    ("qwen1.5-110b", "long_500k"): "pure full attention: 512k KV/layer infeasible",
+    ("phi3-medium-14b", "long_500k"): "pure full attention",
+    ("phi4-mini-3.8b", "long_500k"): "pure full attention",
+    ("internvl2-1b", "long_500k"): "pure full attention backbone",
+    ("llama4-maverick-400b-a17b", "long_500k"): "full-attention text variant",
+    ("whisper-base", "long_500k"): "decoder context architecturally <=448",
+}
+
+CANONICAL = {
+    "qwen15_110b": "qwen1.5-110b",
+    "phi3_medium_14b": "phi3-medium-14b",
+    "phi4_mini_3p8b": "phi4-mini-3.8b",
+    "gemma3_1b": "gemma3-1b",
+    "internvl2_1b": "internvl2-1b",
+    "xlstm_350m": "xlstm-350m",
+    "deepseek_v3_671b": "deepseek-v3-671b",
+    "llama4_maverick": "llama4-maverick-400b-a17b",
+    "recurrentgemma_2b": "recurrentgemma-2b",
+    "whisper_base": "whisper-base",
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(.*?\)|[a-z0-9\[\]{},\s/]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|c64|c128)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+# wire-bytes multiplier per collective kind (ring algorithms)
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(line: str, op: str) -> int:
+    # result type sits between ' = ' and the op name:
+    #   %x = f32[64,128]{1,0} all-reduce(...)
+    #   %y = (f32[8]{0}, f32[8]{0}) all-gather-start(...)
+    seg = line.split(" = ", 1)[1] if " = " in line else line
+    seg = seg.split(op, 1)[0]
+    total = 0
+    for m in SHAPE_RE.finditer(seg):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, parsed from the
+    post-partitioning HLO (the module is the per-device program)."""
+    out = {k: 0.0 for k in WIRE_FACTOR}
+    count = {k: 0 for k in WIRE_FACTOR}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        b = _shape_bytes(line, kind)
+        out[kind] += b * WIRE_FACTOR[kind]
+        count[kind] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": float(sum(out.values()))}
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape, mesh, parallel: ParallelConfig):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, sharded, no alloc)."""
+    b, s = shape.global_batch, shape.seq_len
+    seq_shard = (shape.mode == "decode" and parallel.seq_shard_decode
+                 and b < int(np.prod([mesh.shape[a] for a in dp_axes(mesh)])))
+
+    def sds(shp, dt, spec):
+        return jax.ShapeDtypeStruct(shp, dt,
+                                    sharding=NamedSharding(mesh, spec))
+
+    if shape.mode == "train":
+        batch = {}
+        s_text = s
+        if cfg.frontend == "patch_stub":
+            s_text = s - cfg.num_patches
+            batch["patch_embeds"] = (b, cfg.num_patches, cfg.frontend_dim,
+                                     jnp.float32)
+        if cfg.is_encdec:
+            batch["frames"] = (b, cfg.max_source_positions, cfg.frontend_dim,
+                               jnp.float32)
+        batch["tokens"] = (b, s_text, jnp.int32)
+        batch["labels"] = (b, s_text, jnp.int32)
+        shapes = {k: jax.ShapeDtypeStruct(v[:-1], v[-1])
+                  for k, v in batch.items()}
+        specs = batch_specs(shapes, mesh)
+        return {k: sds(v.shape, v.dtype, specs[k])
+                for k, v in shapes.items()}, None
+
+    if shape.mode == "prefill":
+        batch = {}
+        s_text = s
+        if cfg.frontend == "patch_stub":
+            s_text = s - cfg.num_patches
+            batch["patch_embeds"] = (b, cfg.num_patches, cfg.frontend_dim,
+                                     jnp.float32)
+        if cfg.is_encdec:
+            batch["frames"] = (b, cfg.max_source_positions, cfg.frontend_dim,
+                               jnp.float32)
+        batch["tokens"] = (b, s_text, jnp.int32)
+        shapes = {k: jax.ShapeDtypeStruct(v[:-1], v[-1])
+                  for k, v in batch.items()}
+        specs = batch_specs(shapes, mesh)
+        return {k: sds(v.shape, v.dtype, specs[k])
+                for k, v in shapes.items()}, None
+
+    # decode: tokens (B, 1) + cache + scalar position
+    model = Model(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(batch=b, max_len=s, dtype=jnp.bfloat16))
+    c_specs = cache_specs(cache_shape, mesh, seq_shard=seq_shard)
+    cache = jax.tree_util.tree_map(
+        lambda l, sp: sds(l.shape, l.dtype, sp), cache_shape, c_specs)
+    tokens = sds((b, 1), jnp.int32,
+                 batch_specs(
+                     {"t": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
+                     mesh)["t"])
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return {"tokens": tokens, "pos": pos}, cache
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def _lower_cell(cfg, shape, mesh, parallel):
+    """Build abstract inputs and lower the right step fn. No allocation."""
+    run = RunConfig(model=cfg, parallel=parallel)
+    model = Model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(params_shape, mesh, fsdp=parallel.fsdp)
+    params_abs = jax.tree_util.tree_map(
+        lambda l, sp: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=NamedSharding(mesh, sp)),
+        params_shape, p_specs)
+    n_params = int(sum(int(np.prod(l.shape))
+                       for l in jax.tree_util.tree_leaves(params_shape)))
+    batch_abs, cache_abs = input_specs(cfg, shape, mesh, parallel)
+
+    with mesh:
+        if shape.mode == "train":
+            o_spec_tree = param_specs(params_shape, mesh, fsdp=parallel.fsdp)
+            mk = lambda tree: jax.tree_util.tree_map(
+                lambda l, sp: jax.ShapeDtypeStruct(
+                    l.shape, jnp.float32, sharding=NamedSharding(mesh, sp)),
+                tree, o_spec_tree)
+            opt_abs = optim.AdamWState(
+                step=jax.ShapeDtypeStruct(
+                    (), jnp.int32, sharding=NamedSharding(mesh, P())),
+                mu=mk(params_shape), nu=mk(params_shape))
+            step_abs = jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P()))
+            fn = make_train_step(model, run)
+            lowered = jax.jit(fn).lower(params_abs, opt_abs, batch_abs,
+                                        step_abs)
+            ntoks = shape.global_batch * shape.seq_len
+        elif shape.mode == "prefill":
+            fn = make_prefill_step(model, run)
+            lowered = jax.jit(fn).lower(params_abs, batch_abs)
+            ntoks = shape.global_batch * shape.seq_len
+        else:
+            fn = make_serve_step(model, run)
+            lowered = jax.jit(fn).lower(params_abs, cache_abs,
+                                        batch_abs["tokens"],
+                                        batch_abs["pos"])
+            ntoks = shape.global_batch  # one new token per sequence
+    return lowered, ntoks, n_params
+
+
+def _analyze(compiled) -> dict:
+    out: dict = {}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        out["flops"] = float(cost.get("flops", 0.0))
+        out["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        out["transcendentals"] = float(cost.get("transcendentals", 0.0))
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = str(e)
+    try:
+        hlo = compiled.as_text()
+        out["collectives"] = collective_bytes(hlo)
+        out["hlo_bytes"] = len(hlo)
+    except Exception as e:  # pragma: no cover
+        out["collectives"] = {"error": str(e), "total_bytes": 0.0}
+    return out
+
+
+def _period_split(cfg):
+    period = len(cfg.block_pattern)
+    if cfg.num_experts and cfg.moe_interval > 1:
+        period = int(np.lcm(period, cfg.moe_interval))
+    s = cfg.first_k_dense if cfg.num_experts else 0
+    return period, s
+
+
+def recurrence_flops(cfg, shape) -> float:
+    """Analytic FLOPs of sequential-time recurrences (mlstm/slstm lax.scan
+    bodies execute T times but are counted once by XLA's cost model and once
+    by the two-point probe). Per-device."""
+    from repro.models.transformer import effective_kinds
+    kinds = [k.split("|")[0] for k in effective_kinds(cfg)]
+    t = shape.seq_len if shape.mode != "decode" else 1
+    tokens = shape.global_batch * t
+    d = cfg.d_model
+    h = cfg.num_heads
+    e = cfg.expand_factor * d
+    hd_m = e // h
+    hd_s = d // h
+    per_tok = 0.0
+    for k in kinds:
+        if k == "mlstm":
+            per_tok += h * (5.0 * hd_m * hd_m)
+        elif k == "slstm":
+            per_tok += 8.0 * d * hd_s
+    mult = 3.0 if shape.mode == "train" else 1.0
+    return per_tok * tokens * mult
+
+
+def _two_point_estimate(cfg, shape, mesh, parallel) -> dict | None:
+    """Extrapolate per-device cost terms past scan-body undercounting.
+
+    Compile unrolled variants with s+P and s+2P layers; the delta is one
+    period's cost, linearly extended to the full depth (incl. tail layers).
+    """
+    import dataclasses as _dc
+
+    from repro.models.transformer import force_unroll
+
+    if cfg.is_encdec:
+        return None  # unrolled already; module numbers are exact
+    period, s = _period_split(cfg)
+    n_super = (cfg.num_layers - s) // period
+    tail = (cfg.num_layers - s) % period
+    if n_super <= 1:
+        return None
+    probes = []
+    for mult in (1, 2):
+        c = _dc.replace(cfg, num_layers=s + mult * period)
+        with force_unroll():
+            lowered, _, _ = _lower_cell(c, shape, mesh, parallel)
+            compiled = lowered.compile()
+        probes.append(_analyze(compiled))
+    m1, m2 = probes
+    reps = (n_super - 1) + tail / period
+
+    def ext(key):
+        a = m1.get(key, 0.0)
+        b = m2.get(key, 0.0)
+        return a + reps * (b - a)
+
+    coll1 = m1.get("collectives", {})
+    coll2 = m2.get("collectives", {})
+    ct1 = coll1.get("total_bytes", 0.0)
+    ct2 = coll2.get("total_bytes", 0.0)
+    per_kind = {}
+    for k in WIRE_FACTOR:
+        a = coll1.get("bytes", {}).get(k, 0.0)
+        b = coll2.get("bytes", {}).get(k, 0.0)
+        per_kind[k] = a + reps * (b - a)
+    n_dev = float(np.prod(list(mesh.shape.values())))
+    est = {
+        "flops": ext("flops") + recurrence_flops(cfg, shape) / n_dev,
+        "bytes_accessed": ext("bytes_accessed"),
+        "transcendentals": ext("transcendentals"),
+        "collective_bytes": ct1 + reps * (ct2 - ct1),
+        "collective_bytes_by_kind": per_kind,
+        "probe_layers": [s + period, s + 2 * period],
+        "reps_extrapolated": reps,
+        "analytic_recurrence_flops_per_device":
+            recurrence_flops(cfg, shape)
+            / float(np.prod(list(mesh.shape.values()))),
+    }
+    return est
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             parallel: ParallelConfig | None = None,
+             skip_compile: bool = False, measure: bool = True) -> dict:
+    t0 = time.time()
+    canonical = CANONICAL.get(arch, arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": canonical, "shape": shape_name,
+                 "multi_pod": multi_pod, "mode": shape.mode}
+    if (canonical, shape_name) in SKIPS:
+        rec["status"] = "skipped"
+        rec["reason"] = SKIPS[(canonical, shape_name)]
+        return rec
+
+    cfg = get_config(arch)
+    parallel = parallel or ParallelConfig(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    lowered, ntoks, n_params = _lower_cell(cfg, shape, mesh, parallel)
+    rec["params"] = n_params
+    rec["lower_s"] = round(time.time() - t0, 2)
+    if skip_compile:
+        rec["status"] = "lowered"
+        return rec
+    t1 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                    + getattr(mem, "argument_size_in_bytes", 0)
+                                    + getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    rec.update({"cost": {}, "collectives": {}})
+    a = _analyze(compiled)
+    rec["cost"] = {k: a.get(k) for k in ("flops", "bytes_accessed",
+                                         "transcendentals")}
+    rec["collectives"] = a.get("collectives", {})
+    rec["hlo_bytes"] = a.get("hlo_bytes")
+
+    if measure:
+        try:
+            rec["roofline_est"] = _two_point_estimate(cfg, shape, mesh,
+                                                      parallel)
+        except Exception as e:
+            rec["roofline_est"] = {"error": f"{type(e).__name__}: {e}"}
+
+    rec["tokens_per_step"] = ntoks
+    rec["model_flops_per_token"] = model_flops_per_token(cfg, n_params)
+    rec["status"] = "ok"
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-compile", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if (args.both_meshes or args.all)
+              else [args.multi_pod])
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+    # smallest models first so early results feed the roofline analysis
+    size_rank = {"whisper_base": 0, "xlstm_350m": 1, "gemma3_1b": 2,
+                 "internvl2_1b": 3, "recurrentgemma_2b": 4,
+                 "phi4_mini_3p8b": 5, "phi3_medium_14b": 6,
+                 "qwen15_110b": 7, "llama4_maverick": 8,
+                 "deepseek_v3_671b": 9}
+    cells.sort(key=lambda c: (size_rank.get(c[0], 99), c[2], c[1]))
+
+    os.makedirs(args.out, exist_ok=True)
+    for a, s, mp in cells:
+        tag = f"{CANONICAL.get(a, a)}__{s}__{'pod2' if mp else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip-done] {tag}")
+            continue
+        print(f"[run] {tag}", flush=True)
+        try:
+            # roofline probes are single-pod only (the §Roofline table
+            # is single-pod per spec); multi-pod proves the pod axis shards
+            rec = run_cell(a, s, multi_pod=mp,
+                           skip_compile=args.skip_compile,
+                           measure=not mp)
+        except Exception as e:
+            rec = {"arch": CANONICAL.get(a, a), "shape": s, "multi_pod": mp,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"  -> {rec['status']} "
+              f"(lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

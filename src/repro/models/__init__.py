@@ -1,0 +1,4 @@
+"""Assigned-architecture model substrate (pure functional JAX)."""
+from .model import Model, count_params, model_flops_per_token
+
+__all__ = ["Model", "count_params", "model_flops_per_token"]

@@ -1,0 +1,310 @@
+"""Attention blocks: GQA (full / local-window / bidirectional / cross) and
+DeepSeek-style MLA with compressed KV. Query-chunked score computation keeps
+the activation peak at ``block_q * S`` instead of ``S^2`` (this is a perf
+feature measured in EXPERIMENTS.md §Perf).
+
+Layouts: x (B, T, D); q (B, T, KH, G, hd); k/v (B, S, KH, hd).
+Decode caches: {"k": (B, S, KH, hd), "v": ...} — MLA caches only the latent:
+{"ckv": (B, S, r_kv), "kr": (B, S, r_rope)} which is what makes 500k-token
+decode feasible for deepseek-v3 (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .layers import dense, dense_init, apply_rope, rope
+
+__all__ = ["make_attn_params", "attention", "make_mla_params",
+           "mla_attention", "init_kv_cache", "init_mla_cache"]
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, kind: str, window: int):
+    """(..., Tq, Tk) boolean mask. q_pos/k_pos: int32 position vectors."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if kind == "bidir" or kind == "cross":
+        return jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    causal = (k <= q) & (k >= 0)  # k < 0 marks unwritten ring-buffer slots
+    if kind == "local":
+        return causal & (k > q - window)
+    return causal
+
+
+# ---------------------------------------------------------------------------
+# GQA core
+# ---------------------------------------------------------------------------
+
+def make_attn_params(key, d_model, num_heads, num_kv_heads, head_dim, *,
+                     qkv_bias=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _sdpa(q, k, v, q_pos, k_pos, kind, window, block_q, softcap=0.0):
+    """Query-chunked scaled dot-product attention.
+
+    q: (B, T, KH, G, hd); k, v: (B, S, KH, hd) -> (B, T, KH, G, hd).
+
+    Local-window chunks are *banded*: each query chunk only reads the
+    K/V slice that its window can see (scores cost bq*(bq+window) instead
+    of bq*S — a pure mask would still compute the full rectangle; §Perf).
+    """
+    b, t, kh, g, hd = q.shape
+    s = k.shape[1]
+    dv = v.shape[-1]  # may differ from hd (MLA: qk dims != v dim)
+    scale = 1.0 / np.sqrt(hd)
+
+    def one_chunk(qc, qp, kc, vc, kp):
+        # qc: (B, bq, KH, G, hd); kc/vc: (B, Sc, KH, *)
+        scores = jnp.einsum("btkgh,bskh->bkgts", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        m = _mask(qp, kp, kind, window)          # (bq, Sc)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(vc.dtype)
+        return jnp.einsum("bkgts,bskh->btkgh", probs, vc)
+
+    if block_q <= 0 or t <= block_q or t % block_q:
+        return one_chunk(q, q_pos, k, v, k_pos)
+    # Python-unrolled chunks (not lax.map): keeps every chunk visible to the
+    # compiler's cost model and lets XLA schedule/fuse freely; peak memory is
+    # still ~one chunk of scores thanks to liveness.
+    nchunk = t // block_q
+    banded = (kind == "local" and s == t and window < s)
+    band = min(s, ((window + block_q + 127) // 128) * 128)
+    outs = []
+    for i in range(nchunk):
+        qc = jax.lax.slice_in_dim(q, i * block_q, (i + 1) * block_q, axis=1)
+        pc = jax.lax.slice_in_dim(q_pos, i * block_q, (i + 1) * block_q,
+                                  axis=-1)
+        if banded:
+            lo = max(0, min((i + 1) * block_q - band, s - band))
+            kc = jax.lax.slice_in_dim(k, lo, lo + band, axis=1)
+            vc = jax.lax.slice_in_dim(v, lo, lo + band, axis=1)
+            kp = jax.lax.slice_in_dim(k_pos, lo, lo + band, axis=-1)
+        elif kind == "causal" and s == t:
+            # causal triangle: chunk i sees only K[0:(i+1)*bq] — halves the
+            # score rectangle vs mask-only computation
+            hi = (i + 1) * block_q
+            kc = jax.lax.slice_in_dim(k, 0, hi, axis=1)
+            vc = jax.lax.slice_in_dim(v, 0, hi, axis=1)
+            kp = jax.lax.slice_in_dim(k_pos, 0, hi, axis=-1)
+        else:
+            kc, vc, kp = k, v, k_pos
+        outs.append(one_chunk(qc, pc, kc, vc, kp))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(params, x, *, cfg, kind: str, positions, cache=None,
+              cache_pos=None, kv_source=None, theta=None, use_rope=True,
+              block_q=1024, ft=None):
+    """GQA attention; returns (out, new_cache).
+
+    * train/prefill: ``cache=None`` — self-attention over x.
+    * decode: ``cache`` holds (B, S, KH, hd) K/V; ``cache_pos`` is the scalar
+      write index; x has T=1 (or a small chunk).
+    * cross-attention: ``kv_source`` supplies the encoder output; cache may
+      hold its precomputed K/V.
+    """
+    b, t, d = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kh
+    theta = cfg.rope_theta if theta is None else theta
+
+    q = dense({"w": params["wq"], **({"b": params["bq"]} if "bq" in params
+                                     else {})}, x, ft=ft)
+    q = q.reshape(b, t, kh, g, hd)
+
+    if kind == "cross" and cache is not None and "k" in cache and \
+            kv_source is None:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        k_pos = jnp.arange(k.shape[1])
+    else:
+        src = x if kv_source is None else kv_source
+        k = dense({"w": params["wk"], **({"b": params["bk"]} if "bk" in params
+                                         else {})}, src, ft=ft)
+        v = dense({"w": params["wv"], **({"b": params["bv"]} if "bv" in params
+                                         else {})}, src, ft=ft)
+        k = k.reshape(b, src.shape[1], kh, hd)
+        v = v.reshape(b, src.shape[1], kh, hd)
+        if use_rope and kind != "cross":
+            # new K entries sit at the same absolute positions as the queries
+            k = _rope_kv(k, positions, hd, theta, x.dtype)
+        if cache is not None and kind != "cross":
+            # Ring-buffer write: windowed caches (local attention) hold only
+            # the last `window` entries; full caches degenerate to slot==pos.
+            s_c = cache["k"].shape[1]
+            slot = cache_pos % s_c
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+                cache["k"].dtype), slot, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+                cache["v"].dtype), slot, axis=1)
+            new_cache = {"k": k, "v": v}
+            # absolute position held by each ring slot (-ve => unwritten)
+            k_pos = cache_pos - (cache_pos - jnp.arange(s_c)) % s_c
+        elif kind == "cross":
+            new_cache = {"k": k, "v": v}
+            k_pos = jnp.arange(k.shape[1])
+        else:
+            new_cache = None
+            k_pos = positions
+
+    if use_rope and kind != "cross":
+        qcos, qsin = rope(positions, hd, theta, x.dtype)
+        q = apply_rope(q.reshape(b, t, kh * g, hd), qcos[None], qsin[None]
+                       ).reshape(b, t, kh, g, hd)
+
+    out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
+                positions, k_pos, kind, cfg.window_size, block_q,
+                cfg.logit_softcap)
+    out = out.reshape(b, t, h * hd)
+    out = dense({"w": params["wo"]}, out, ft=ft)
+    return out, new_cache
+
+
+def _rope_kv(k, positions, hd, theta, dtype):
+    """Apply rope to K at the given absolute positions."""
+    kcos, ksin = rope(positions, hd, theta, dtype)
+    b, s, kh, _ = k.shape
+    return apply_rope(k.reshape(b, s, kh, hd), kcos[None], ksin[None]
+                      ).reshape(b, s, kh, hd)
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16, layers_shape=()):
+    shape = layers_shape + (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3): low-rank compressed KV + decoupled RoPE
+# ---------------------------------------------------------------------------
+
+def make_mla_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if rq:
+        p["wq_a"] = dense_init(ks[0], (d, rq), dtype)
+        p["q_norm"] = layers.make_norm_params(rq)
+        p["wq_b"] = dense_init(ks[1], (rq, h * (dn + dr)), dtype)
+    else:
+        p["wq"] = dense_init(ks[1], (d, h * (dn + dr)), dtype)
+    p["wkv_a"] = dense_init(ks[2], (d, rkv + dr), dtype)
+    p["kv_norm"] = layers.make_norm_params(rkv)
+    p["wkv_b"] = dense_init(ks[3], (rkv, h * (dn + dv)), dtype)
+    p["wo"] = dense_init(ks[4], (h * dv, d), dtype)
+    return p
+
+
+def mla_attention(params, x, *, cfg, positions, cache=None, cache_pos=None,
+                  block_q=1024, ft=None):
+    """MLA self-attention (causal). Returns (out, new_cache).
+
+    Prefill: reconstructs full K/V from the latent (naive path).
+    Decode:  weight-absorbed path — scores and values computed directly
+    against the cached latent, O(S * (r_kv + d_rope)) per step.
+    """
+    b, t, d = x.shape
+    h = cfg.num_heads
+    rkv = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    # queries
+    if cfg.q_lora_rank:
+        qa = dense({"w": params["wq_a"]}, x, ft=ft)
+        qa = layers.rmsnorm(params["q_norm"], qa, cfg.norm_eps)
+        q = dense({"w": params["wq_b"]}, qa, ft=ft)
+    else:
+        q = dense({"w": params["wq"]}, x, ft=ft)
+    q = q.reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    qcos, qsin = rope(positions, dr, cfg.rope_theta, x.dtype)
+    q_rope = apply_rope(q_rope, qcos[None], qsin[None])
+
+    # latent kv
+    kv = dense({"w": params["wkv_a"]}, x, ft=ft)
+    ckv, k_rope = kv[..., :rkv], kv[..., rkv:]
+    ckv = layers.rmsnorm(params["kv_norm"], ckv, cfg.norm_eps)
+    kr_cos, kr_sin = rope(positions, dr, cfg.rope_theta, x.dtype)
+    k_rope = apply_rope(k_rope[:, :, None], kr_cos[None], kr_sin[None]
+                        )[:, :, 0]
+
+    wkv_b = params["wkv_b"].reshape(rkv, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    if cache is None:
+        # prefill/train: reconstruct per-head K/V (naive path)
+        k_nope = jnp.einsum("btr,rhd->bthd", ckv, w_uk.astype(ckv.dtype))
+        v = jnp.einsum("btr,rhd->bthd", ckv, w_uv.astype(ckv.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                      (b, t, h, dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(qq[:, :, :, None].reshape(b, t, h, 1, dn + dr),
+                    k, v, positions, positions, "causal",
+                    cfg.window_size, block_q)
+        out = out.reshape(b, t, h * dv)
+        new_cache = None
+    else:
+        # decode: absorbed path against the latent cache
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), cache_pos, axis=1)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+        s = ckv_c.shape[1]
+        # absorb W_uk into q: (b,t,h,dn) x (r,h,dn) -> (b,t,h,r)
+        q_abs = jnp.einsum("bthd,rhd->bthr", q_nope, w_uk.astype(q_nope.dtype))
+        scores = (jnp.einsum("bthr,bsr->bhts", q_abs,
+                             ckv_c.astype(q_abs.dtype),
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bthd,bsd->bhts", q_rope,
+                               kr_c.astype(q_rope.dtype),
+                               preferred_element_type=jnp.float32))
+        scores = scores / np.sqrt(dn + dr)
+        k_pos = jnp.arange(s)
+        m = _mask(positions, k_pos, "causal", cfg.window_size)
+        scores = jnp.where(m[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhts,bsr->bthr", probs, ckv_c.astype(x.dtype))
+        out = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(x.dtype))
+        out = out.reshape(b, t, h * dv)
+
+    out = dense({"w": params["wo"]}, out, ft=ft)
+    return out, new_cache
+
+
+def init_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16, layers_shape=()):
+    return {
+        "ckv": jnp.zeros(layers_shape + (batch, max_len, cfg.kv_lora_rank),
+                         dtype),
+        "kr": jnp.zeros(layers_shape + (batch, max_len, cfg.qk_rope_head_dim),
+                        dtype),
+    }

@@ -1,0 +1,200 @@
+"""Primitive layers: inits, norms, dense (with optional ABFT protection),
+embeddings, RoPE. Pure-functional: params are nested dicts of jax arrays.
+
+Every dense contraction routes through :func:`dense`, which consults the
+model's FT policy — when ``protect_linears`` is on, the product is computed
+through the paper's two-sided ABFT (``core.abft.ft_matmul``) so compute SEUs
+in any projection are detected and corrected online.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abft
+from repro.core.ft import FTPolicy
+
+__all__ = ["truncated_normal", "rmsnorm", "layernorm", "make_norm_params",
+           "dense", "make_dense_params", "embed", "rope", "apply_rope",
+           "swiglu", "gelu_mlp", "make_mlp_params", "mlp", "FTContext"]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    stddev = scale / np.sqrt(max(shape[0], 1) if len(shape) > 1 else 1.0)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def _fan_in(shape: Sequence[int], contract_dims: int = 1) -> float:
+    f = 1
+    for s in shape[:contract_dims]:
+        f *= s
+    return float(f)
+
+
+def dense_init(key, shape, dtype=jnp.float32, contract_dims: int = 1):
+    std = 1.0 / np.sqrt(_fan_in(shape, contract_dims))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# FT context — threads detection counters out of functional layers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FTContext:
+    """Mutable-during-trace accumulator for ABFT stats (functionally pure:
+    entries are traced arrays collected during apply and summed by caller)."""
+
+    policy: FTPolicy
+    flagged: list = dataclasses.field(default_factory=list)
+    scores: list = dataclasses.field(default_factory=list)
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy is not None and self.policy.protect_linears
+
+    def record(self, stats: dict):
+        self.flagged.append(stats["flagged"])
+        self.scores.append(stats["score"])
+
+    def summary(self) -> dict:
+        if not self.flagged:
+            z = jnp.zeros((), jnp.float32)
+            return {"ft_flagged": z, "ft_max_score": z}
+        return {
+            "ft_flagged": jnp.sum(jnp.stack(self.flagged)),
+            "ft_max_score": jnp.max(jnp.stack(self.scores)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def make_norm_params(d: int, kind: str = "rmsnorm") -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(dt)
+
+
+def norm(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    return rmsnorm(params, x, eps) if kind == "rmsnorm" else layernorm(
+        params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def make_dense_params(key, d_in, d_out, *, bias=False,
+                      dtype=jnp.float32) -> dict:
+    p = {"w": dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x, *, ft: FTContext | None = None):
+    """y = x @ w (+ b), optionally through two-sided ABFT (paper's scheme)."""
+    w = params["w"]
+    if ft is not None and ft.enabled and x.ndim >= 2 and w.ndim == 2:
+        lead = x.shape[:-1]
+        x2 = x.reshape((-1, x.shape[-1]))
+        y2, stats = abft.ft_matmul(x2, w, threshold=ft.policy.threshold)
+        ft.record(stats)
+        y = y2.reshape(lead + (w.shape[-1],))
+    else:
+        y = jnp.einsum("...k,kd->...d", x, w.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def embed(params, tokens, dtype):
+    return jnp.take(params["embedding"], tokens, axis=0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(positions, head_dim, theta, dtype=jnp.float32):
+    """Rotary embedding tables. positions: (...,) -> (..., head_dim/2) each."""
+    half = head_dim // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., T, H, D) with tables (..., T, D/2), broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def make_mlp_params(key, d, d_ff, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wi_gate": dense_init(ks[0], (d, d_ff), dtype),
+            "wi_up": dense_init(ks[1], (d, d_ff), dtype),
+            "wo": dense_init(ks[2], (d_ff, d), dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, d_ff), dtype),
+        "wo": dense_init(ks[1], (d_ff, d), dtype),
+    }
+
+
+def swiglu(params, x, *, ft=None):
+    g = dense({"w": params["wi_gate"]}, x, ft=ft)
+    u = dense({"w": params["wi_up"]}, x, ft=ft)
+    h = jax.nn.silu(g) * u
+    return dense({"w": params["wo"]}, h, ft=ft)
+
+
+def gelu_mlp(params, x, *, ft=None):
+    h = jax.nn.gelu(dense({"w": params["wi"]}, x, ft=ft))
+    return dense({"w": params["wo"]}, h, ft=ft)
+
+
+def mlp(params, x, act: str, *, ft=None):
+    return swiglu(params, x, ft=ft) if act == "swiglu" else gelu_mlp(
+        params, x, ft=ft)

@@ -1,0 +1,382 @@
+"""Model assembly: embeddings -> (prefix | scanned super-blocks | tail) ->
+final norm -> lm head; enc-dec (whisper) and modality frontends (stubs).
+
+Everything is pure-functional: ``Model.init`` builds the param pytree (use
+``jax.eval_shape`` for abstract init — the dry-run never allocates),
+``Model.apply`` runs the forward pass, ``Model.decode_step`` advances one
+token against the cache pytree from ``Model.init_cache``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from . import attention, layers, transformer
+from .layers import dense, dense_init
+from .transformer import (block_apply, init_block_state, layer_groups,
+                          make_block_params)
+
+__all__ = ["Model", "count_params", "model_flops_per_token"]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def _tree_zeros_aux():
+    z = jnp.zeros((), jnp.float32)
+    return {"moe_aux": z, "ft_flagged": z, "ft_max_score": z}
+
+
+def _merge_aux(a, b):
+    return {
+        "moe_aux": a["moe_aux"] + b["moe_aux"],
+        "ft_flagged": a["ft_flagged"] + b["ft_flagged"],
+        "ft_max_score": jnp.maximum(a["ft_max_score"], b["ft_max_score"]),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        pdt = _dt(cfg.param_dtype)
+        keys = jax.random.split(key, 16)
+        params: dict = {
+            "embed": {"embedding": layers.dense_init(
+                keys[0], (cfg.vocab_size, cfg.d_model), pdt)},
+            "final_norm": layers.make_norm_params(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"w": layers.dense_init(
+                keys[1], (cfg.d_model, cfg.vocab_size), pdt)}
+        if cfg.frontend == "patch_stub":
+            params["frontend"] = {"w": layers.dense_init(
+                keys[2], (cfg.frontend_dim, cfg.d_model), pdt)}
+        if cfg.is_encdec:
+            params["encoder"] = self._init_stack(
+                keys[3], ["bidir|mlp"] * cfg.encoder_layers, pdt)
+            params["enc_norm"] = layers.make_norm_params(cfg.d_model,
+                                                         cfg.norm)
+            params["enc_pos"] = layers.dense_init(
+                keys[4], (cfg.max_source_positions, cfg.d_model), pdt)
+            params["dec_pos"] = layers.dense_init(
+                keys[5], (cfg.max_target_positions, cfg.d_model), pdt)
+            if cfg.frontend == "audio_stub":
+                params["frontend"] = {"w": layers.dense_init(
+                    keys[6], (cfg.frontend_dim, cfg.d_model), pdt)}
+            params["decoder"] = self._init_stack(
+                keys[7], ["attn|mlp"] * cfg.decoder_layers, pdt,
+                cross=True)
+        else:
+            params["stack"] = self._init_groups(keys[8], pdt)
+        return params
+
+    def _init_groups(self, key, pdt) -> dict:
+        cfg = self.cfg
+        g = layer_groups(cfg)
+        keys = jax.random.split(key, 3)
+        out: dict = {}
+        if g.prefix:
+            pk = jax.random.split(keys[0], len(g.prefix))
+            out["prefix"] = {
+                str(i): make_block_params(pk[i], cfg, kind, pdt)
+                for i, kind in enumerate(g.prefix)}
+        if g.n_super:
+            sk = jax.random.split(keys[1], len(g.super_block))
+            scan_p = {}
+            for j, kind in enumerate(g.super_block):
+                lk = jax.random.split(sk[j], g.n_super)
+                scan_p[f"slot{j}"] = jax.vmap(
+                    lambda kk, _kind=kind: make_block_params(
+                        kk, cfg, _kind, pdt))(lk)
+            out["scan"] = scan_p
+        if g.tail:
+            tk = jax.random.split(keys[2], len(g.tail))
+            out["tail"] = {
+                str(i): make_block_params(tk[i], cfg, kind, pdt)
+                for i, kind in enumerate(g.tail)}
+        return out
+
+    def _init_stack(self, key, kinds, pdt, *, cross=False) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, len(kinds))
+        stack = {}
+        for i, kind in enumerate(kinds):
+            p = make_block_params(ks[i], cfg, kind, pdt)
+            if cross:
+                ck = jax.random.fold_in(ks[i], 1)
+                p["cross_norm"] = layers.make_norm_params(cfg.d_model, cfg.norm)
+                p["cross_attn"] = attention.make_attn_params(
+                    ck, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.head_dim, dtype=pdt)
+            stack[str(i)] = p
+        return stack
+
+    # --------------------------------------------------------------- forward
+    def apply(self, params, batch: dict, *, block_q: int = 1024,
+              remat: bool = False):
+        """Full-sequence forward. Returns (logits_f32, aux)."""
+        cfg = self.cfg
+        adt = _dt(cfg.dtype)
+        if cfg.is_encdec:
+            return self._apply_encdec(params, batch, block_q, remat)
+        x, positions = self._embed_inputs(params, batch, adt)
+        from repro.parallel.sharding import constrain_hidden
+        x = constrain_hidden(x)
+        x, aux = self._run_groups(params["stack"], x, positions, block_q,
+                                  remat)
+        return self._head(params, x), aux
+
+    def _embed_inputs(self, params, batch, adt):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = layers.embed(params["embed"], tokens, adt)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), adt)
+        if cfg.frontend == "patch_stub" and "patch_embeds" in batch:
+            patches = dense(params["frontend"],
+                            batch["patch_embeds"].astype(adt))
+            x = jnp.concatenate([patches, x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        from repro.parallel.sharding import constrain_logits
+        x = layers.norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = params["embed"]["embedding"].T
+        else:
+            w = params["lm_head"]["w"]
+        logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return constrain_logits(logits)
+
+    def _run_groups(self, stack, x, positions, block_q, remat,
+                    caches=None, cache_pos=None):
+        cfg = self.cfg
+        g = layer_groups(cfg)
+        ftp = cfg.ft
+        aux = _tree_zeros_aux()
+        new_caches: dict = {}
+
+        def run_one(p, x, kind, cache):
+            fn = functools.partial(
+                block_apply, cfg=cfg, kind=kind, positions=positions,
+                cache_pos=cache_pos, block_q=block_q, ftp=ftp)
+            if remat and remat != "none" and cache is None:
+                # per-block remat on the unrolled path (matches the scanned
+                # path, which remats the whole super-block body)
+                return jax.checkpoint(
+                    lambda p_, x_: fn(p_, x_, cache=None))(p, x)
+            return fn(p, x, cache=cache)
+
+        for name, kinds in (("prefix", g.prefix), ):
+            if kinds:
+                ncl = []
+                for i, kind in enumerate(kinds):
+                    c = None if caches is None else caches["prefix"][str(i)]
+                    x, nc, a = run_one(stack["prefix"][str(i)], x, kind, c)
+                    aux = _merge_aux(aux, a)
+                    ncl.append(nc)
+                if caches is not None:
+                    new_caches["prefix"] = {str(i): c
+                                            for i, c in enumerate(ncl)}
+
+        if g.n_super:
+            slots = list(g.super_block)
+
+            def body(carry, xs):
+                x = carry
+                if caches is None:
+                    p_slice = xs
+                    c_slice = {f"slot{j}": None for j in range(len(slots))}
+                else:
+                    p_slice, c_slice = xs
+                a_all = _tree_zeros_aux()
+                nc_out = {}
+                for j, kind in enumerate(slots):
+                    x, nc, a = run_one(p_slice[f"slot{j}"], x, kind,
+                                       c_slice[f"slot{j}"])
+                    a_all = _merge_aux(a_all, a)
+                    nc_out[f"slot{j}"] = nc
+                ys = a_all if caches is None else (a_all, nc_out)
+                return x, ys
+
+            if remat == "dots":
+                # cheaper policy: keep matmul outputs, recompute elementwise
+                body_fn = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            elif remat and remat != "none":
+                body_fn = jax.checkpoint(body)
+            else:
+                body_fn = body
+            xs = stack["scan"] if caches is None else (stack["scan"],
+                                                       caches["scan"])
+            x, ys = jax.lax.scan(body_fn, x, xs)
+            if caches is None:
+                a_scan = ys
+            else:
+                a_scan, nc_scan = ys
+                new_caches["scan"] = nc_scan
+            aux = _merge_aux(aux, jax.tree_util.tree_map(
+                lambda v: jnp.sum(v) if v.ndim else v,
+                {"moe_aux": a_scan["moe_aux"],
+                 "ft_flagged": a_scan["ft_flagged"],
+                 "ft_max_score": jnp.max(a_scan["ft_max_score"])}))
+
+        if g.tail:
+            ncl = []
+            for i, kind in enumerate(g.tail):
+                c = None if caches is None else caches["tail"][str(i)]
+                x, nc, a = run_one(stack["tail"][str(i)], x, kind, c)
+                aux = _merge_aux(aux, a)
+                ncl.append(nc)
+            if caches is not None:
+                new_caches["tail"] = {str(i): c for i, c in enumerate(ncl)}
+
+        return (x, aux) if caches is None else (x, aux, new_caches)
+
+    # --------------------------------------------------------------- enc-dec
+    def _encode(self, params, batch, block_q, remat=False):
+        cfg = self.cfg
+        adt = _dt(cfg.dtype)
+        frames = batch["frames"].astype(adt)
+        h = dense(params["frontend"], frames)           # stub conv frontend
+        f = h.shape[1]
+        h = h + params["enc_pos"][:f].astype(adt)[None]
+        positions = jnp.arange(f)
+        aux = _tree_zeros_aux()
+        for i in range(cfg.encoder_layers):
+            h, _, a = block_apply(params["encoder"][str(i)], h, cfg=cfg,
+                                  kind="bidir|mlp", positions=positions,
+                                  block_q=block_q, ftp=cfg.ft)
+            aux = _merge_aux(aux, a)
+        return layers.norm(params["enc_norm"], h, cfg.norm, cfg.norm_eps), aux
+
+    def _decoder_block(self, p, x, enc_out, positions, cache, cache_pos,
+                       block_q):
+        cfg = self.cfg
+        x, nc, a = block_apply(
+            {k: v for k, v in p.items() if not k.startswith("cross")},
+            x, cfg=cfg, kind="attn|mlp", positions=positions,
+            cache=None if cache is None else cache.get("self"),
+            cache_pos=cache_pos, block_q=block_q, ftp=cfg.ft)
+        h = layers.norm(p["cross_norm"], x, cfg.norm, cfg.norm_eps)
+        cross_cache = None if cache is None else cache.get("cross")
+        mix, cc = attention.attention(
+            p["cross_attn"], h, cfg=cfg, kind="cross", positions=positions,
+            cache=cross_cache, kv_source=enc_out, use_rope=False,
+            block_q=block_q)
+        x = x + mix
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": nc, "cross": cc}
+        return x, new_cache, a
+
+    def _apply_encdec(self, params, batch, block_q, remat):
+        cfg = self.cfg
+        adt = _dt(cfg.dtype)
+        enc_out, aux = self._encode(params, batch, block_q, remat)
+        tokens = batch["tokens"]
+        x = layers.embed(params["embed"], tokens, adt)
+        x = x + params["dec_pos"][:x.shape[1]].astype(adt)[None]
+        positions = jnp.arange(x.shape[1])
+        for i in range(cfg.decoder_layers):
+            x, _, a = self._decoder_block(params["decoder"][str(i)], x,
+                                          enc_out, positions, None, None,
+                                          block_q)
+            aux = _merge_aux(aux, a)
+        return self._head(params, x), aux
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc_len = cfg.max_source_positions
+            dec = {}
+            for i in range(cfg.decoder_layers):
+                dec[str(i)] = {
+                    "self": init_block_state(cfg, "attn|mlp", batch, max_len,
+                                             dtype),
+                    "cross": attention.init_kv_cache(cfg, batch, enc_len,
+                                                     dtype),
+                }
+            return {"decoder": dec}
+        g = layer_groups(cfg)
+        caches: dict = {}
+        if g.prefix:
+            caches["prefix"] = {
+                str(i): init_block_state(cfg, kind, batch, max_len, dtype)
+                for i, kind in enumerate(g.prefix)}
+        if g.n_super:
+            scan_c = {}
+            for j, kind in enumerate(g.super_block):
+                one = init_block_state(cfg, kind, batch, max_len, dtype)
+                scan_c[f"slot{j}"] = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (g.n_super,) + a.shape), one)
+            caches["scan"] = scan_c
+        if g.tail:
+            caches["tail"] = {
+                str(i): init_block_state(cfg, kind, batch, max_len, dtype)
+                for i, kind in enumerate(g.tail)}
+        return caches
+
+    def decode_step(self, params, cache, tokens, pos, *, block_q: int = 0):
+        """One decode step. tokens: (B, 1); pos: scalar int32 write index."""
+        cfg = self.cfg
+        adt = _dt(cfg.dtype)
+        positions = pos + jnp.arange(tokens.shape[1])
+        if cfg.is_encdec:
+            x = layers.embed(params["embed"], tokens, adt)
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"], pos, tokens.shape[1], axis=0
+            ).astype(adt)[None]
+            aux = _tree_zeros_aux()
+            new_dec = {}
+            for i in range(cfg.decoder_layers):
+                x, nc, a = self._decoder_block(
+                    params["decoder"][str(i)], x, None, positions,
+                    cache["decoder"][str(i)], pos, block_q)
+                new_dec[str(i)] = nc
+                aux = _merge_aux(aux, a)
+            return self._head(params, x), {"decoder": new_dec}, aux
+        x = layers.embed(params["embed"], tokens, adt)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), adt)
+        x, aux, new_caches = self._run_groups(
+            params["stack"], x, positions, block_q, False, caches=cache,
+            cache_pos=pos)
+        return self._head(params, x), new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# analytics
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via abstract init (no allocation)."""
+    model = Model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return int(sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(shapes)))
+
+
+def model_flops_per_token(cfg: ModelConfig, params_total: int | None = None
+                          ) -> float:
+    """6 * N_active per token (dense) — the §Roofline MODEL_FLOPS basis."""
+    n = params_total if params_total is not None else count_params(cfg)
+    n_active = n - cfg.inactive_expert_params()
+    return 6.0 * n_active

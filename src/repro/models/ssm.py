@@ -1,0 +1,310 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM + sLSTM (xLSTM).
+
+RG-LRU uses ``jax.lax.associative_scan`` (vector state -> materializing all T
+states is cheap). The LSTM variants keep exact sequential semantics with
+``jax.lax.scan`` — the xLSTM chunkwise-parallel form is a documented future
+kernel (DESIGN.md); FLOPs are identical, only MXU utilization differs.
+
+All blocks expose a decode path carrying an explicit recurrent state, which
+is what makes the 500k-token decode shape O(1) memory per step for these
+architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .layers import dense, dense_init
+
+__all__ = [
+    "make_rglru_params", "rglru_block", "init_rglru_state",
+    "make_mlstm_params", "mlstm_block", "init_mlstm_state",
+    "make_slstm_params", "slstm_block", "init_slstm_state",
+]
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (shared by rglru / mlstm)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, state=None):
+    """x: (B, T, C), w: (K, C) depthwise. state: (B, K-1, C) carry or None.
+
+    Returns (y, new_state). Train path pads with zeros; decode path uses the
+    carried last K-1 inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def make_rglru_params(key, cfg, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in_gate": dense_init(ks[0], (d, w), dtype),    # gelu branch
+        "w_in_rec": dense_init(ks[1], (d, w), dtype),     # recurrent branch
+        "conv_w": dense_init(ks[2], (cfg.conv1d_width, w), dtype),
+        "w_a": dense_init(ks[3], (w, w), dtype),          # recurrence gate
+        "w_x": dense_init(ks[4], (w, w), dtype),          # input gate
+        # Lambda init: softplus(lam) in [2, 6] -> decay a in ~[0.86, 0.999]
+        "lam": jnp.asarray(np.linspace(2.0, 6.0, w), jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _rglru_coeffs(params, u):
+    """u: (B, T, W) conv output -> (a, b) recurrence coefficients (f32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense({"w": params["w_a"]}, uf))
+    i = jax.nn.sigmoid(dense({"w": params["w_x"]}, uf))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_block(params, x, *, state=None, ft=None):
+    """Griffin recurrent block. x: (B, T, D) -> (y, new_state).
+
+    state: None (train) or {"h": (B, W), "conv": (B, K-1, W)} (decode).
+    """
+    gate = jax.nn.gelu(dense({"w": params["w_in_gate"]}, x, ft=ft))
+    u = dense({"w": params["w_in_rec"]}, x, ft=ft)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, params["conv_w"], conv_state)
+    a, b = _rglru_coeffs(params, u)
+
+    if state is None:
+        # associative scan over time: h_t = a_t h_{t-1} + b_t
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+        _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+        new_state = None
+    else:
+        h_prev = state["h"].astype(jnp.float32)
+        hs = []
+        h = h_prev
+        for t in range(x.shape[1]):  # decode: t is 1 (or tiny), unrolled
+            h = a[:, t] * h + b[:, t]
+            hs.append(h)
+        h = jnp.stack(hs, axis=1)
+        new_state = {"h": h[:, -1].astype(state["h"].dtype),
+                     "conv": new_conv.astype(state["conv"].dtype)}
+    y = dense({"w": params["w_out"]}, (h.astype(x.dtype) * gate), ft=ft)
+    return y, new_state
+
+
+def init_rglru_state(cfg, batch, dtype=jnp.bfloat16, layers_shape=()):
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros(layers_shape + (batch, w), jnp.float32),
+        "conv": jnp.zeros(layers_shape + (batch, cfg.conv1d_width - 1, w),
+                          dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix-memory cell, exponential gating, m-stabilized
+# ---------------------------------------------------------------------------
+
+def make_mlstm_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    e = cfg.expand_factor * d
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * e), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv1d_width, e), dtype),
+        "wq": dense_init(ks[2], (e, e), dtype),
+        "wk": dense_init(ks[3], (e, e), dtype),
+        "wv": dense_init(ks[4], (e, e), dtype),
+        "w_ig": dense_init(ks[5], (e, h), jnp.float32),
+        "w_fg": dense_init(ks[6], (e, h), jnp.float32),
+        "fg_bias": jnp.full((h,), 4.0, jnp.float32),  # open forget gates
+        "out_norm": layers.make_norm_params(e),
+        "w_down": dense_init(ks[7], (e, d), dtype),
+    }
+
+
+def _mlstm_cell_scan(q, k, v, logi, logf, c0, n0, m0):
+    """Exact sequential mLSTM over time (f32 state, m-stabilized).
+
+    q,k,v: (B, T, H, hd); logi, logf: (B, T, H).
+    state: C (B, H, hd, hd), n (B, H, hd), m (B, H).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+
+    def step(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, li, lf = xs  # (B, H, hd), ..., (B, H)
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)[..., None]
+        ig = jnp.exp(li - m_new)[..., None]
+        c = fg[..., None] * c + ig[..., None] * (kt[..., :, None] *
+                                                 vt[..., None, :])
+        n = fg * n + ig * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt * scale, c)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt * scale, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        out = num / den
+        return (c, n, m_new), out
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          logi.swapaxes(0, 1), logf.swapaxes(0, 1))
+    (c, n, m), out = jax.lax.scan(step, (c0, n0, m0), xs)
+    return out.swapaxes(0, 1), (c, n, m)
+
+
+def mlstm_block(params, x, *, cfg, state=None, ft=None):
+    """x: (B, T, D) -> (y, new_state). state carries (C, n, m, conv)."""
+    b, t, d = x.shape
+    e = cfg.expand_factor * d
+    h = cfg.num_heads
+    hd = e // h
+
+    up = dense({"w": params["w_up"]}, x, ft=ft)
+    xm, xz = up[..., :e], up[..., e:]
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xm, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = dense({"w": params["wq"]}, xc, ft=ft).reshape(b, t, h, hd)
+    k = dense({"w": params["wk"]}, xc, ft=ft).reshape(b, t, h, hd)
+    v = dense({"w": params["wv"]}, xm, ft=ft).reshape(b, t, h, hd)
+    logi = (xc.astype(jnp.float32) @ params["w_ig"])
+    logf = jax.nn.log_sigmoid(xc.astype(jnp.float32) @ params["w_fg"]
+                              + params["fg_bias"])
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        c0, n0, m0 = (state["c"].astype(jnp.float32),
+                      state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+    out, (c, n, m) = _mlstm_cell_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        logi, logf, c0, n0, m0)
+    out = out.reshape(b, t, e).astype(x.dtype)
+    out = layers.rmsnorm(params["out_norm"], out, cfg.norm_eps)
+    out = out * jax.nn.silu(xz)
+    y = dense({"w": params["w_down"]}, out, ft=ft)
+    new_state = None
+    if state is not None:
+        new_state = {"c": c, "n": n, "m": m,
+                     "conv": new_conv.astype(state["conv"].dtype)}
+    return y, new_state
+
+
+def init_mlstm_state(cfg, batch, dtype=jnp.bfloat16, layers_shape=()):
+    e = cfg.expand_factor * cfg.d_model
+    h = cfg.num_heads
+    hd = e // h
+    return {
+        "c": jnp.zeros(layers_shape + (batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros(layers_shape + (batch, h, hd), jnp.float32),
+        "m": jnp.zeros(layers_shape + (batch, h), jnp.float32),
+        "conv": jnp.zeros(layers_shape + (batch, cfg.conv1d_width - 1, e),
+                          dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar-memory cell with block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+def make_slstm_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 10)
+    ffs = int(round(d * 4 / 3 / 64)) * 64
+    p = {}
+    for j, gate in enumerate(("i", "f", "z", "o")):
+        p[f"w_{gate}"] = dense_init(ks[j], (d, d), dtype)
+        p[f"r_{gate}"] = dense_init(ks[4 + j], (h, hd, hd), dtype)
+    p["f_bias"] = jnp.full((d,), 4.0, jnp.float32)
+    p["out_norm"] = layers.make_norm_params(d)
+    p["ffn"] = layers.make_mlp_params(ks[8], d, ffs, "swiglu", dtype)
+    return p
+
+
+def slstm_block(params, x, *, cfg, state=None, ft=None):
+    """x: (B, T, D) -> (y, new_state). Strictly sequential (h->h recurrence)."""
+    b, t, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+
+    wi = dense({"w": params["w_i"]}, x, ft=ft).astype(jnp.float32)
+    wf = (dense({"w": params["w_f"]}, x, ft=ft).astype(jnp.float32)
+          + params["f_bias"])
+    wz = dense({"w": params["w_z"]}, x, ft=ft).astype(jnp.float32)
+    wo = dense({"w": params["w_o"]}, x, ft=ft).astype(jnp.float32)
+
+    if state is None:
+        hidden = jnp.zeros((b, d), jnp.float32)
+        cell = jnp.zeros((b, d), jnp.float32)
+        norm = jnp.zeros((b, d), jnp.float32)
+        stab = jnp.zeros((b, d), jnp.float32)
+    else:
+        hidden, cell, norm, stab = (state[k].astype(jnp.float32)
+                                    for k in ("h", "c", "n", "m"))
+
+    rw = {g: params[f"r_{g}"].astype(jnp.float32) for g in "ifzo"}
+
+    def rmat(hprev, g):
+        hh = hprev.reshape(b, h, hd)
+        return jnp.einsum("bhd,hde->bhe", hh, rw[g]).reshape(b, d)
+
+    def step(carry, xs):
+        hprev, c, n, m = carry
+        xi, xf, xz, xo = xs
+        it = xi + rmat(hprev, "i")
+        ftg = xf + rmat(hprev, "f")
+        zt = jnp.tanh(xz + rmat(hprev, "z"))
+        ot = jax.nn.sigmoid(xo + rmat(hprev, "o"))
+        logf = jax.nn.log_sigmoid(ftg)
+        m_new = jnp.maximum(logf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * zt
+        n = f_s * n + i_s
+        hnew = ot * c / jnp.maximum(n, 1.0)
+        return (hnew, c, n, m_new), hnew
+
+    xs = (wi.swapaxes(0, 1), wf.swapaxes(0, 1), wz.swapaxes(0, 1),
+          wo.swapaxes(0, 1))
+    (hidden, cell, norm, stab), hs = jax.lax.scan(
+        step, (hidden, cell, norm, stab), xs)
+    out = hs.swapaxes(0, 1).astype(x.dtype)
+    out = layers.rmsnorm(params["out_norm"], out, cfg.norm_eps)
+    # cell output + its gated FFN (caller adds the outer residual)
+    y = out + layers.swiglu(params["ffn"], out, ft=ft)
+    new_state = None
+    if state is not None:
+        new_state = {"h": hidden, "c": cell, "n": norm, "m": stab}
+    return y, new_state
+
+
+def init_slstm_state(cfg, batch, dtype=jnp.bfloat16, layers_shape=()):
+    d = cfg.d_model
+    z = lambda: jnp.zeros(layers_shape + (batch, d), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": z()}

@@ -1,0 +1,204 @@
+"""Block assembly + scan-stack machinery.
+
+A *block* = pre-norm mixer (attention family / recurrent family) + pre-norm
+FFN (dense or MoE). Layers are grouped into (prefix, scanned super-blocks,
+tail): contiguous homogeneous layer patterns are stacked and executed with
+``jax.lax.scan`` so an 80-layer model compiles as one loop — essential to
+keep SPMD compile times sane at 512 devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, layers, moe, ssm
+from .layers import FTContext
+
+__all__ = ["effective_kinds", "layer_groups", "make_block_params",
+           "block_apply", "init_block_state", "LayerGroups"]
+
+
+ATTN_KINDS = ("attn", "local", "global", "mla", "bidir")
+RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+
+def effective_kinds(cfg) -> tuple[str, ...]:
+    """Per-layer 'mixer|ffn' descriptors, e.g. 'attn|moe', 'rglru|mlp'."""
+    kinds = []
+    pat = cfg.block_pattern
+    for i in range(cfg.num_layers):
+        base = pat[i % len(pat)]
+        if base in RECURRENT_KINDS and base != "rglru":
+            ffn = "none"          # xLSTM blocks integrate their FFN
+        elif base == "rglru":
+            ffn = "mlp"
+        else:
+            ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+        kinds.append(f"{base}|{ffn}")
+    return tuple(kinds)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroups:
+    prefix: tuple[str, ...]          # unrolled leading layer kinds
+    super_block: tuple[str, ...]     # kinds within one scanned super-block
+    n_super: int                     # number of scanned super-blocks
+    tail: tuple[str, ...]            # unrolled trailing layer kinds
+
+    @property
+    def total(self) -> int:
+        return (len(self.prefix) + len(self.super_block) * self.n_super
+                + len(self.tail))
+
+
+# When True, layer_groups unrolls everything (no lax.scan). Used by the
+# dry-run's two-point cost measurement: XLA's cost analysis counts while-loop
+# bodies ONCE, so roofline FLOPs are extrapolated from small unrolled
+# variants (see launch/dryrun.py) while the full scanned model is what
+# actually compiles/ships.
+FORCE_UNROLL = False
+
+
+class force_unroll:
+    def __enter__(self):
+        global FORCE_UNROLL
+        self._old = FORCE_UNROLL
+        FORCE_UNROLL = True
+
+    def __exit__(self, *a):
+        global FORCE_UNROLL
+        FORCE_UNROLL = self._old
+
+
+def layer_groups(cfg) -> LayerGroups:
+    kinds = effective_kinds(cfg)
+    n = len(kinds)
+    # leading layers that break the periodic pattern (deepseek first-k-dense)
+    period = len(cfg.block_pattern)
+    if cfg.num_experts and cfg.moe_interval > 1:
+        period = int(np.lcm(period, cfg.moe_interval))
+    s = cfg.first_k_dense if cfg.num_experts else 0
+    rest = n - s
+    n_super = rest // period
+    tail_len = rest % period
+    if FORCE_UNROLL or n_super <= 1:  # not worth scanning
+        return LayerGroups(prefix=kinds, super_block=(), n_super=0, tail=())
+    return LayerGroups(
+        prefix=kinds[:s],
+        super_block=kinds[s:s + period],
+        n_super=n_super,
+        tail=kinds[s + period * n_super:] if tail_len else (),
+    )
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def make_block_params(key, cfg, kind: str, dtype=jnp.float32) -> dict:
+    base, ffn = kind.split("|")
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": layers.make_norm_params(cfg.d_model, cfg.norm)}
+    if base in ("attn", "local", "global", "bidir"):
+        p["attn"] = attention.make_attn_params(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim, qkv_bias=cfg.qkv_bias, dtype=dtype)
+    elif base == "mla":
+        p["attn"] = attention.make_mla_params(ks[0], cfg, dtype)
+    elif base == "rglru":
+        p["mixer"] = ssm.make_rglru_params(ks[0], cfg, dtype)
+    elif base == "mlstm":
+        p["mixer"] = ssm.make_mlstm_params(ks[0], cfg, dtype)
+    elif base == "slstm":
+        p["mixer"] = ssm.make_slstm_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(base)
+    if ffn == "mlp":
+        dff = cfg.dense_d_ff or cfg.d_ff
+        p["norm2"] = layers.make_norm_params(cfg.d_model, cfg.norm)
+        p["mlp"] = layers.make_mlp_params(ks[1], cfg.d_model, dff, cfg.act,
+                                          dtype)
+    elif ffn == "moe":
+        p["norm2"] = layers.make_norm_params(cfg.d_model, cfg.norm)
+        p["moe"] = moe.make_moe_params(ks[1], cfg, dtype)
+    return p
+
+
+def _ffn_dff(cfg, kind):
+    base, ffn = kind.split("|")
+    return (cfg.dense_d_ff or cfg.d_ff) if ffn == "mlp" else cfg.moe_d_ff
+
+
+def block_apply(params, x, *, cfg, kind: str, positions=None, cache=None,
+                cache_pos=None, block_q=1024, ftp=None):
+    """One transformer block. Returns (y, new_cache, aux_dict)."""
+    base, ffn = kind.split("|")
+    ft = FTContext(ftp) if (ftp is not None and ftp.protect_linears) else None
+    aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+
+    h = layers.norm(params["norm1"], x, cfg.norm, cfg.norm_eps)
+    if base in ("attn", "local", "global", "bidir"):
+        theta = (cfg.rope_theta_global if base == "global"
+                 else cfg.rope_theta)
+        mix, new_cache = attention.attention(
+            params["attn"], h, cfg=cfg,
+            kind={"attn": "causal", "global": "causal"}.get(base, base),
+            positions=positions, cache=cache, cache_pos=cache_pos,
+            theta=theta, block_q=block_q, ft=ft)
+    elif base == "mla":
+        mix, new_cache = attention.mla_attention(
+            params["attn"], h, cfg=cfg, positions=positions, cache=cache,
+            cache_pos=cache_pos, block_q=block_q, ft=ft)
+    elif base == "rglru":
+        mix, new_cache = ssm.rglru_block(params["mixer"], h, state=cache,
+                                         ft=ft)
+    elif base == "mlstm":
+        mix, new_cache = ssm.mlstm_block(params["mixer"], h, cfg=cfg,
+                                         state=cache, ft=ft)
+    elif base == "slstm":
+        mix, new_cache = ssm.slstm_block(params["mixer"], h, cfg=cfg,
+                                         state=cache, ft=ft)
+    else:
+        raise ValueError(base)
+    x = x + mix
+
+    if ffn == "mlp":
+        h = layers.norm(params["norm2"], x, cfg.norm, cfg.norm_eps)
+        x = x + layers.mlp(params["mlp"], h, cfg.act, ft=ft)
+    elif ffn == "moe":
+        h = layers.norm(params["norm2"], x, cfg.norm, cfg.norm_eps)
+        y, moe_aux = moe.moe_block(params["moe"], h, cfg, ft=ft)
+        x = x + y
+        aux["moe_aux"] = moe_aux
+
+    if ft is not None:
+        aux.update(ft.summary())
+    else:
+        aux.update({"ft_flagged": jnp.zeros((), jnp.float32),
+                    "ft_max_score": jnp.zeros((), jnp.float32)})
+    return x, new_cache, aux
+
+
+def init_block_state(cfg, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    """Decode-time cache/state for one block (None for stateless kinds)."""
+    base, _ = kind.split("|")
+    if base in ("attn", "global", "bidir"):
+        return attention.init_kv_cache(cfg, batch, max_len, dtype)
+    if base == "local":
+        return attention.init_kv_cache(cfg, batch,
+                                       min(max_len, cfg.window_size), dtype)
+    if base == "mla":
+        return attention.init_mla_cache(cfg, batch, max_len, dtype)
+    if base == "rglru":
+        return ssm.init_rglru_state(cfg, batch, dtype)
+    if base == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch, dtype)
+    if base == "slstm":
+        return ssm.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(base)

@@ -1,0 +1,99 @@
+"""AdamW with FSDP-sharded states, cosine schedule, global-norm clipping and
+fault-aware update skipping (non-finite grads are dropped, counted in
+FTStats — the fail-continue half of the paper's fault model applied to
+training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AdamWState", "init_state", "apply_updates", "cosine_schedule",
+           "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init_state(params) -> AdamWState:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def cosine_schedule(step, *, base_lr, warmup_steps, total_steps,
+                    min_ratio=0.1):
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return base_lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    skip_nonfinite: bool = True,
+):
+    """One AdamW step. Returns (params, state, info dict)."""
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    scale = jnp.where(grad_clip > 0,
+                      jnp.minimum(1.0, grad_clip / (gnorm + 1e-12)), 1.0)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    new = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], new,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], new,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], new,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+
+    if skip_nonfinite:
+        keep = lambda new_t, old_t: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(finite, n, o), new_t, old_t)
+        new_p = keep(new_p, params)
+        new_m = keep(new_m, state.mu)
+        new_v = keep(new_v, state.nu)
+        step = jnp.where(finite, step, state.step)
+
+    info = {"grad_norm": gnorm, "lr": lr,
+            "skipped": (~finite).astype(jnp.float32)}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), info

@@ -1,0 +1,9 @@
+"""Distribution: sharding rules, compressed collectives, pipeline parallel."""
+from .sharding import (dp_axes, param_specs, batch_specs, cache_specs,
+                       shard_tree_specs, logical_rules)
+from .collectives import compress_allreduce_mean, quantize_int8, dequantize_int8
+from .pipeline import pipeline_apply
+
+__all__ = ["dp_axes", "param_specs", "batch_specs", "cache_specs",
+           "shard_tree_specs", "logical_rules", "compress_allreduce_mean",
+           "quantize_int8", "dequantize_int8", "pipeline_apply"]

@@ -1,0 +1,252 @@
+"""Logical-axis sharding rules: DP + FSDP + TP + EP + SP over the production
+mesh (data, model) / (pod, data, model).
+
+Params are sharded by *path pattern + shape*: weights put their contraction
+feature dim on the FSDP axes (ZeRO-3 over ``(pod, data)``) and their
+head/ffn/vocab/expert dim on ``model`` (TP/EP). Scan-stacked leaves carry a
+leading layer axis that stays unsharded. Any dim not divisible by its target
+axis falls back to replication (e.g. kv_heads=1 for gemma3).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["dp_axes", "param_specs", "batch_specs", "cache_specs",
+           "shard_tree_specs", "logical_rules", "current_mesh",
+           "constrain_logits", "constrain_hidden", "constrain_moe_buffer"]
+
+
+def current_mesh():
+    """The mesh active via ``with mesh:`` during trace, or None."""
+    try:
+        import jax.interpreters.pxla as pxla
+        m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def _constrain(x, build_spec):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = build_spec(mesh)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_logits(x):
+    """(B, T, V): batch over DP, vocab over model — keeps the CE working set
+    at V/|model| per device (the dominant activation for big-vocab LMs)."""
+    def b(mesh):
+        dp = dp_axes(mesh)
+        bs = dp if _div(x.shape[0], mesh, dp) else None
+        vs = "model" if _div(x.shape[-1], mesh, ("model",)) else None
+        return P(*([bs] + [None] * (x.ndim - 2) + [vs]))
+    return _constrain(x, b)
+
+
+def constrain_hidden(x):
+    """(B, T, D) residual stream: batch over DP, rest replicated."""
+    def b(mesh):
+        dp = dp_axes(mesh)
+        bs = dp if _div(x.shape[0], mesh, dp) else None
+        if bs is None and x.ndim >= 2 and _div(x.shape[1], mesh, ("data",)):
+            return P(None, "data", *([None] * (x.ndim - 2)))  # SP fallback
+        return P(*([bs] + [None] * (x.ndim - 1)))
+    return _constrain(x, b)
+
+
+def constrain_moe_buffer(x):
+    """(E, C, D) expert buffer: experts over model (EP), capacity over DP."""
+    def b(mesh):
+        dp = dp_axes(mesh)
+        es = "model" if _div(x.shape[0], mesh, ("model",)) else None
+        cs = dp if _div(x.shape[1], mesh, dp) else None
+        return P(es, cs, None)
+    return _constrain(x, b)
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes: ('pod', 'data') when multi-pod else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0 and n >= size
+
+
+# ---------------------------------------------------------------------------
+# parameter rules: (path regex, rank) -> builder(shape, mesh) -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+def _spec_for_param(path: str, shape: tuple[int, ...], mesh: Mesh,
+                    fsdp: bool = True) -> P:
+    f = dp_axes(mesh) if fsdp else None   # FSDP shard target
+    t = "model"
+
+    def ok(dim_size, axes):
+        return axes is not None and _div(dim_size, mesh, axes)
+
+    nd = len(shape)
+    # scan-stacked leaves: leading layer axis unsharded; recurse on the rest
+    stacked = bool(re.search(r"scan/slot\d+", path)) and nd >= 2
+    if stacked:
+        inner = _spec_for_param(path.replace("scan/", "unstacked/"),
+                                shape[1:], mesh, fsdp)
+        return P(*((None,) + tuple(inner)))
+
+    if "embedding" in path:
+        # (vocab, d_model): vocab on model (TP), d_model on fsdp
+        return P(t if ok(shape[0], t) else None,
+                 f if ok(shape[1], f) else None)
+    if "lm_head" in path:
+        return P(f if ok(shape[0], f) else None,
+                 t if ok(shape[1], t) else None)
+    if re.search(r"moe/(wi_gate|wi_up|wo)", path):
+        # (E, d, f): EP over model
+        return P(t if ok(shape[0], t) else None,
+                 f if ok(shape[1], f) else None, None)
+    if "router" in path:
+        return P(f if ok(shape[0], f) else None, None)
+    if re.search(r"att.*/(wq|wk|wv)$|wq_b|wkv_b|wq$", path) and nd == 2:
+        # (d_in, heads*hd): TP on the head dim
+        return P(f if ok(shape[0], f) else None,
+                 t if ok(shape[1], t) else None)
+    if re.search(r"att.*/wo$|/wo$", path) and nd == 2 and "mlp" not in path:
+        return P(t if ok(shape[0], t) else None,
+                 f if ok(shape[1], f) else None)
+    if re.search(r"(wi_gate|wi_up|wi|w_up|w_in_gate|w_in_rec)$", path) \
+            and nd == 2:
+        return P(f if ok(shape[0], f) else None,
+                 t if ok(shape[1], t) else None)
+    if re.search(r"(wo|w_down|w_out)$", path) and nd == 2:
+        return P(t if ok(shape[0], t) else None,
+                 f if ok(shape[1], f) else None)
+    if re.search(r"(wq_a|wkv_a)$", path) and nd == 2:
+        return P(f if ok(shape[0], f) else None, None)
+    if nd == 2:
+        # generic matrices (recurrent gates etc.): fsdp on dim0 if divisible
+        return P(f if ok(shape[0], f) else None,
+                 t if ok(shape[1], t) else None)
+    if nd == 3:
+        return P(None,
+                 f if ok(shape[1], f) else None,
+                 t if ok(shape[2], t) else None)
+    return P(*([None] * nd))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpec tree matching a (possibly abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: _spec_for_param(_path_str(kp), leaf.shape, mesh,
+                                         fsdp),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape: Any, mesh: Mesh, *, seq_shard: bool = False):
+    """Input batch sharding: batch dim over DP axes; optionally seq over
+    'data' (SP, for decode shapes with batch < mesh data size)."""
+    dp = dp_axes(mesh)
+
+    def spec(kp, leaf):
+        nd = len(leaf.shape)
+        b = leaf.shape[0]
+        bspec = dp if _div(b, mesh, dp) else None
+        rest = [None] * (nd - 1)
+        if seq_shard and nd >= 2 and bspec is None and \
+                _div(leaf.shape[1], mesh, "data"):
+            rest[0] = "data"
+        return P(*([bspec] + rest))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, *, seq_shard: bool = False):
+    """KV/state cache sharding.
+
+    Layout conventions (see models/): KV caches are (..., B, S, KH, hd) or
+    MLA (..., B, S, r); recurrent states (..., B, W)/(..., B, H, hd, hd).
+    Batch goes to DP when divisible; otherwise (long_500k, B=1) the sequence
+    axis is sharded over 'data' (sequence parallelism) when possible; head
+    axes go to 'model' when divisible.
+    """
+    dp = dp_axes(mesh)
+
+    def spec(kp, leaf):
+        path = _path_str(kp)
+        shape = leaf.shape
+        nd = len(shape)
+        out = [None] * nd
+        stacked = 1 if re.search(r"scan/slot\d+", path) else 0
+        bi = stacked  # batch index
+        seq_axes = []
+        if nd > bi and _div(shape[bi], mesh, dp):
+            out[bi] = dp
+        elif seq_shard and nd > bi + 1 and re.search(r"/(k|v|ckv|kr)$",
+                                                     path) \
+                and _div(shape[bi + 1], mesh, "data"):
+            seq_axes.append("data")
+        # KV head axis over model where divisible; otherwise shard the
+        # *sequence* axis over model (flash-decoding-style split-K: softmax
+        # partials are psum'd by SPMD). KV heads are < 16 for every assigned
+        # arch, so seq-over-model is what bounds decode KV per device.
+        if re.search(r"/(k|v)$", path) and nd == bi + 4:
+            if _div(shape[bi + 2], mesh, ("model",)):
+                out[bi + 2] = "model"
+            elif _div(shape[bi + 1], mesh, tuple(seq_axes) + ("model",)):
+                seq_axes.append("model")
+        if re.search(r"/(ckv|kr)$", path) and nd == bi + 3 and \
+                _div(shape[bi + 1], mesh, tuple(seq_axes) + ("model",)):
+            seq_axes.append("model")  # MLA latent cache: seq over model
+        if seq_axes:
+            out[bi + 1] = tuple(seq_axes) if len(seq_axes) > 1 else \
+                seq_axes[0]
+        if re.search(r"/(c|n)$", path) and nd >= bi + 3 and \
+                _div(shape[bi + 1], mesh, ("model",)):
+            out[bi + 1] = "model"  # mlstm per-head state over model
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def shard_tree_specs(tree, mesh: Mesh):
+    """Replicated spec tree (optimizer scalars etc.)."""
+    return jax.tree_util.tree_map(lambda l: P(), tree)
+
+
+def logical_rules(mesh: Mesh) -> dict:
+    """Documentation-oriented summary of the rule set (used by DESIGN/tests)."""
+    return {
+        "batch": dp_axes(mesh),
+        "fsdp": dp_axes(mesh),
+        "tensor": ("model",),
+        "expert": ("model",),
+        "seq(SP)": ("data",),
+    }

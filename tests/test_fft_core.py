@@ -1,0 +1,85 @@
+"""Core FFT library: plans, pure-JAX Stockham, large-N driver vs numpy."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import fft as tfft
+
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(batch, n, dtype=np.complex64):
+    x = RNG.standard_normal((batch, n)) + 1j * RNG.standard_normal((batch, n))
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
+                               2048, 4096, 8192])
+def test_fft_single_pass_matches_numpy(n):
+    x = _rand(4, n)
+    y = np.asarray(tfft.fft(x))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(y, ref, rtol=0, atol=2e-5 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("n", [1 << 14, 1 << 16, 1 << 17, 1 << 20])
+def test_fft_multi_pass_matches_numpy(n):
+    x = _rand(2, n)
+    y = np.asarray(tfft.fft(x))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(y, ref, rtol=0, atol=4e-5 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("n", [64, 1024, 1 << 14])
+def test_ifft_roundtrip(n):
+    x = _rand(3, n)
+    y = np.asarray(tfft.ifft(tfft.fft(x)))
+    np.testing.assert_allclose(y, x, rtol=0, atol=2e-5 * np.abs(x).max())
+
+
+def test_fft_complex128():
+    x = _rand(2, 1024, np.complex128)
+    y = np.asarray(tfft.fft(x))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(y, ref, rtol=0, atol=1e-12 * np.abs(ref).max())
+
+
+def test_naive_dft_and_radix2_agree():
+    x = _rand(2, 256)
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(np.asarray(tfft.naive_dft(jnp.asarray(x))), ref,
+                               atol=3e-4 * np.abs(ref).max())
+    np.testing.assert_allclose(np.asarray(tfft.radix2_fft(jnp.asarray(x))),
+                               ref, atol=2e-5 * np.abs(ref).max())
+
+
+def test_plan_regimes_match_paper_table():
+    # paper Table 1: 1 pass for small, 2 for mid, 3 for large N
+    assert tfft.make_plan(1 << 10).num_passes == 1
+    assert tfft.make_plan(1 << 17).num_passes == 2
+    assert tfft.make_plan(1 << 23).num_passes == 3
+    for n in (1 << 10, 1 << 17, 1 << 23):
+        p = tfft.make_plan(n)
+        assert np.prod(p.kernel_factors) == n
+        for f, stages in zip(p.kernel_factors, p.stages):
+            assert np.prod([s.radix for s in stages]) == f
+
+
+def test_block_radices_mxu_first():
+    assert tfft.block_radices(128) == (128,)
+    assert tfft.block_radices(1 << 13)[0] == 128
+    for n in (8, 64, 512, 4096):
+        assert np.prod(tfft.block_radices(n)) == n
+
+
+def test_linearity():
+    # FFT linearity is the foundation of the two-sided ABFT (paper Eqn. 3)
+    a = _rand(4, 512)
+    e = (RNG.standard_normal(4) + 1j * RNG.standard_normal(4)).astype(
+        np.complex64)
+    lhs = np.asarray(tfft.fft(jnp.einsum("b,bn->n", jnp.asarray(e),
+                                         jnp.asarray(a))))
+    rhs = np.einsum("b,bn->n", e, np.asarray(tfft.fft(a)))
+    np.testing.assert_allclose(lhs, rhs, atol=3e-4 * np.abs(rhs).max())

@@ -1,0 +1,44 @@
+"""rfft / fft2 / FT-protected inverse — library extensions vs numpy."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.fft.extensions import rfft, irfft, fft2, ifft2, ft_ifft
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024])
+def test_rfft_matches_numpy(n):
+    x = RNG.standard_normal((3, n)).astype(np.float32)
+    got = np.asarray(rfft(jnp.asarray(x)))
+    want = np.fft.rfft(x)
+    np.testing.assert_allclose(got, want, atol=3e-4 * np.abs(want).max())
+
+
+def test_irfft_roundtrip():
+    x = RNG.standard_normal((2, 512)).astype(np.float32)
+    got = np.asarray(irfft(rfft(jnp.asarray(x))))
+    np.testing.assert_allclose(got, x, atol=2e-5 * np.abs(x).max())
+
+
+def test_fft2_matches_numpy():
+    x = (RNG.standard_normal((2, 64, 128)) +
+         1j * RNG.standard_normal((2, 64, 128))).astype(np.complex64)
+    got = np.asarray(fft2(jnp.asarray(x)))
+    want = np.fft.fft2(x)
+    np.testing.assert_allclose(got, want, atol=4e-5 * np.abs(want).max())
+    back = np.asarray(ifft2(jnp.asarray(want)))
+    np.testing.assert_allclose(back, x, atol=2e-6 * np.abs(x).max())
+
+
+def test_ft_ifft_detects_and_corrects():
+    x = (RNG.standard_normal((16, 256)) +
+         1j * RNG.standard_normal((16, 256))).astype(np.complex64)
+    inj = jnp.asarray([1, 2, 9, 1, 60.0, -10.0], jnp.float32)
+    res = ft_ifft(jnp.asarray(x), transactions=2, bs=8, inject=inj)
+    want = np.fft.ifft(x)
+    assert int(res.corrected) == 1
+    np.testing.assert_allclose(np.asarray(res.y), want,
+                               atol=1e-4 * np.abs(want).max())
