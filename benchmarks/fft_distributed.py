@@ -1,0 +1,103 @@
+"""Distributed FFT: per-pass collective volume + wall time vs single device.
+
+For each (N, batch, shards) cell this measures three things:
+
+* wall time of the sharded pipeline vs the single-device multi-pass driver,
+* the all-to-all / psum wire bytes parsed from the post-partitioning HLO
+  (launch.dryrun.collective_bytes — the same parser the LM dry-run uses),
+* the analytic model ``core.fft.distributed.collective_volume`` — the two
+  must agree, which is the point: ONE all-to-all per transform, ABFT adding
+  only the 2/B checksum rows plus a 3-scalar psum.
+
+Standalone runs force a multi-device host platform:
+
+    PYTHONPATH=src python -m benchmarks.fft_distributed
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__" and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4")
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as tfft
+from repro.core.fft import distributed as dist
+from repro.launch.dryrun import collective_bytes
+
+from .common import emit, fft_gflops, timeit
+
+
+def _measured_collectives(fn, *args) -> dict:
+    hlo = fn.lower(*args).compile().as_text()
+    return collective_bytes(hlo)
+
+
+def grid(smoke: bool = True):
+    if smoke:
+        return [(14, 8), (17, 2)]
+    return [(ln, b) for ln in (14, 17, 20, 23) for b in (1, 8, 64)]
+
+
+def run(smoke: bool = True):
+    ndev = min(4, len(jax.devices()))
+    shards = 1 << (ndev.bit_length() - 1)  # largest power of two that fits
+    if shards < 2:
+        print("# fft_distributed: single device visible — skipping "
+              "(set --xla_force_host_platform_device_count)")
+        return []
+    mesh = jax.make_mesh((shards,), ("fft",))
+    rng = np.random.default_rng(0)
+    rows = []
+    for ln, b in grid(smoke):
+        n = 1 << ln
+        x = (rng.standard_normal((b, n)) +
+             1j * rng.standard_normal((b, n))).astype(np.complex64)
+        xj = jnp.asarray(x)
+
+        single = jax.jit(tfft.fft)
+        t_1 = timeit(single, xj)
+        t_d = timeit(lambda v: dist.distributed_fft(v, mesh), xj)
+        t_ft = timeit(lambda v: dist.ft_distributed_fft(v, mesh).y, xj)
+
+        # measured collective bytes (HLO) vs the analytic model, for the
+        # natural-order, transposed-order, and ABFT pipelines
+        # natural_order passed explicitly: lru_cache keys on the raw call
+        # signature, so defaulting it here would double-compile the same
+        # pipeline distributed_fft already built with 4 positional args
+        meas = _measured_collectives(
+            dist._dist_fft_fn(mesh, "fft", False, True), xj)
+        meas_t = _measured_collectives(
+            dist._dist_fft_fn(mesh, "fft", False, False), xj)
+        meas_ft = _measured_collectives(
+            dist._ft_dist_fft_fn(mesh, "fft", 1e-4, True), xj,
+            jnp.zeros((7,), jnp.float32))
+        model = dist.collective_volume(n, b, shards)
+        model_t = dist.collective_volume(n, b, shards, natural_order=False)
+        model_ft = dist.collective_volume(n, b, shards, ft=True)
+
+        emit(f"distfft_N2^{ln}_b{b}_x{shards}", t_d * 1e6,
+             f"{fft_gflops(n, b, t_d):.2f}GF/s;vs_single={t_1/t_d:.2f}x;"
+             f"ft_overhead={(t_ft - t_d)/t_d:+.1%}")
+        for tag, m, mdl in (("natural", meas, model),
+                            ("transposed", meas_t, model_t),
+                            ("ft", meas_ft, model_ft)):
+            got = m.get("total_bytes", 0.0)
+            want = mdl["hlo_bytes"]
+            agree = got / want if want else float("nan")
+            emit(f"distfft_N2^{ln}_b{b}_wire_{tag}", got,
+                 f"model={want:.0f}B;hlo/model={agree:.3f};"
+                 f"wire={mdl['total_wire']:.0f}B")
+        rows.append((ln, b, t_1, t_d, t_ft, meas, model, meas_ft, model_ft))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke=True)

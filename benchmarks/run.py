@@ -37,6 +37,9 @@ def main() -> None:
     from . import error_injection
     error_injection.run(smoke=smoke)
 
+    from . import fft_distributed
+    fft_distributed.run(smoke=smoke)
+
     if not args.skip_roofline:
         import os
 

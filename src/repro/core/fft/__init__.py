@@ -13,3 +13,11 @@ __all__ = [
 from .extensions import rfft, irfft, fft2, ifft2, ft_ifft  # noqa: E402
 
 __all__ += ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
+
+from .distributed import (DistPlan, DistFFTResult, make_dist_plan,  # noqa: E402
+                          distributed_fft, distributed_ifft,
+                          ft_distributed_fft, collective_volume, FFT_AXIS)
+
+__all__ += ["DistPlan", "DistFFTResult", "make_dist_plan", "distributed_fft",
+            "distributed_ifft", "ft_distributed_fft", "collective_volume",
+            "FFT_AXIS"]

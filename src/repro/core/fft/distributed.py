@@ -1,0 +1,420 @@
+"""Mesh-sharded distributed FFT: the paper's kernel-level N1 x N2 decomposition
+lifted from one device to a device mesh (pencil decomposition over shard_map).
+
+The single-device multi-pass driver (``large.py``) folds the inter-pass
+transpose into the access pattern of the next pass; across a mesh that
+transpose is irreducibly a collective. "Coded FFT and Its Communication
+Overhead" shows this all-to-all dominates distributed FFT cost, so the
+decomposition here is chosen to need exactly ONE all-to-all regardless of how
+many local radix passes each side of the split runs:
+
+    x (B, N) viewed as (B, N1, N2), n = N2*n1 + n2, sharded over n2
+      pass 1  : batched block FFT over n1      — local (columns are resident)
+      twiddle : T[k1, n2] slice for this shard — local
+      transpose: all-to-all splitting k1, concatenating n2 (the one collective)
+      pass 2  : batched block FFT over n2      — local (rows now resident)
+    output Z[k1, k2] = X[k1 + N1*k2], sharded over k1
+
+The split reuses :func:`make_plan`'s ``kernel_factors`` (the paper's 1/2/3
+HBM-pass regimes); factors beyond the first stay on the local side of the
+all-to-all and run as ordinary local multi-pass FFTs.
+
+Two-side ABFT in the sharded setting (the mesh-level analogue of the paper's
+multi-transaction amortization, §4.2-4.3):
+
+* left (per-pass) checksums — ``sum_k W[k, n] = r * delta(n)`` makes the
+  column sum of every local block FFT predictable from its input; each shard
+  verifies its own passes with ZERO extra traffic (``shard_delta``).
+* right (batch) checksums — ``cs2 = sum_b x_b`` and ``cs3 = sum_b id_b x_b``
+  are themselves signals, sharded exactly like the data. They ride through
+  the same pipeline as two extra batch rows, so F(cs_in) costs no extra
+  collective volume beyond 2/B of the data's. Detection and location compare
+  them against checksums of the *computed* outputs; the only cross-device
+  ABFT traffic is ONE psum of 3 scalars per transform, so detect -> locate ->
+  correct works even when the faulty element lives on another device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import factors
+from .large import _fft_factors
+from .plan import MAX_BLOCK_N, make_plan
+from .stockham import block_fft_stages
+
+# Same guard value as core.abft.encoding.EPS (not imported: core.abft itself
+# imports core.fft at package level, so importing it back would be a cycle).
+EPS = 1e-30
+
+__all__ = [
+    "DistPlan", "DistFFTResult", "make_dist_plan", "distributed_fft",
+    "distributed_ifft", "ft_distributed_fft", "collective_volume",
+    "FFT_AXIS",
+]
+
+# Canonical mesh-axis name for the signal (pencil) dimension; see
+# launch.mesh.make_fft_mesh and kernels.ops auto-dispatch.
+FFT_AXIS = "fft"
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Distributed split of an N-point FFT over ``shards`` devices.
+
+    ``n1`` is the distributed (pass-1) factor — FFT'd while columns are
+    locally resident; ``n2 = N / n1`` is the tail executed after the
+    all-to-all (itself multi-pass locally when n2 > MAX_BLOCK_N).
+    """
+
+    n: int
+    n1: int
+    n2: int
+    shards: int
+    axis: str = FFT_AXIS
+
+    @property
+    def local_in(self) -> tuple[int, int]:
+        return (self.n1, self.n2 // self.shards)
+
+    @property
+    def local_out(self) -> tuple[int, int]:
+        return (self.n1 // self.shards, self.n2)
+
+
+def make_dist_plan(n: int, shards: int, axis: str = FFT_AXIS) -> DistPlan:
+    """Choose the (n1, n2) pencil split for ``shards`` devices.
+
+    Starts from ``make_plan(n).kernel_factors`` (the paper's HBM-pass split)
+    and shifts powers of two between the sides until both are divisible by
+    ``shards`` — the all-to-all needs shards | n1 and the input sharding
+    needs shards | n2.
+    """
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"N must be a power of two, got {n}")
+    if shards & (shards - 1):
+        raise ValueError(f"shard count must be a power of two, got {shards}")
+    if n < shards * shards:
+        raise ValueError(
+            f"N={n} too small for a {shards}-way pencil split "
+            f"(need N >= shards^2)")
+    facs = make_plan(n).kernel_factors
+    if len(facs) > 1:
+        n1 = facs[0]
+    else:
+        n1 = 1 << ((n.bit_length() - 1 + 1) // 2)  # balanced split
+    n2 = n // n1
+    while n1 % shards and n2 > shards:
+        n1 *= 2
+        n2 //= 2
+    while n2 % shards and n1 > shards:
+        n1 //= 2
+        n2 *= 2
+    assert n1 % shards == 0 and n2 % shards == 0, (n, shards, n1, n2)
+    return DistPlan(n=n, n1=n1, n2=n2, shards=shards, axis=axis)
+
+
+def _local_fft(z: jax.Array, inverse: bool) -> jax.Array:
+    """Unnormalized FFT over the last axis, entirely local to the shard.
+
+    Lengths beyond the single-block budget run the same multi-factor
+    composition the single-device driver uses — extra *local* passes, never
+    extra collectives.
+    """
+    nloc = z.shape[-1]
+    if nloc == 1:
+        return z
+    if nloc <= MAX_BLOCK_N:
+        return block_fft_stages(z, inverse=inverse)
+    return _fft_factors(z, make_plan(nloc).kernel_factors, inverse)
+
+
+def _resolve_mesh(mesh, axis: str):
+    if mesh is None:
+        return None
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no '{axis}' axis")
+    return mesh
+
+
+# ---------------------------------------------------------------------------
+# plain distributed transform
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _dist_fft_fn(mesh: Mesh, axis: str, inverse: bool,
+                 natural_order: bool = True):
+    """Build the jitted shard_map pipeline for one (mesh, axis, direction)."""
+    shards = mesh.shape[axis]
+
+    @jax.jit
+    def run(x):  # x: (..., N) complex
+        shape = x.shape
+        n = shape[-1]
+        plan = make_dist_plan(n, shards, axis)
+        n1, n2 = plan.n1, plan.n2
+        tw = jnp.asarray(factors.stage_twiddle(n1, n2, inverse=inverse),
+                         dtype=x.dtype)
+        z = x.reshape((-1, n1, n2))
+
+        def body(zl):
+            d = jax.lax.axis_index(axis)
+            n2l = zl.shape[-1]
+            zl = jnp.swapaxes(zl, -1, -2)
+            zl = block_fft_stages(zl, inverse=inverse)   # FFT over n1
+            zl = jnp.swapaxes(zl, -1, -2)                # (B, n1, n2l)
+            twl = jax.lax.dynamic_slice_in_dim(tw, d * n2l, n2l, axis=1)
+            zl = zl * twl
+            zl = jax.lax.all_to_all(zl, axis, split_axis=1, concat_axis=2,
+                                    tiled=True)          # (B, n1/D, n2)
+            return _local_fft(zl, inverse)               # FFT over n2
+
+        out = shard_map(body, mesh=mesh,
+                        in_specs=P(None, None, axis),
+                        out_specs=P(None, axis, None),
+                        check_rep=False)(z)
+        if natural_order:
+            # k = k1 + n1*k2: transpose the cube to natural order. The
+            # shard axis (k1) lands strided in the flat result, so XLA
+            # materializes it with an all-gather — the unavoidable final
+            # redistribution every distributed FFT pays for natural order.
+            y = jnp.swapaxes(out, -1, -2).reshape((-1, n))
+        else:
+            # FFTW-MPI-style "transposed order": y[b, k1*N2 + k2] holds
+            # X[k1 + N1*k2]. Block-sharded over k1 — zero extra collectives.
+            y = out.reshape((-1, n))
+        if inverse:
+            y = y / n
+        return y.reshape(shape)
+
+    return run
+
+
+def distributed_fft(x: jax.Array, mesh: Mesh | None = None, *,
+                    axis: str = FFT_AXIS, inverse: bool = False,
+                    natural_order: bool = True) -> jax.Array:
+    """FFT over the last axis, pencil-sharded over ``mesh.shape[axis]``
+    devices. Matches ``jnp.fft.fft`` conventions; batch dims are replicated
+    over the mesh (shard them outside via ordinary batching if desired).
+
+    ``natural_order=False`` skips the final redistribution and returns the
+    transposed digit order ``y[.., k1*N2 + k2] = X[k1 + N1*k2]``, still
+    sharded — the cheap choice when the consumer is shard-local anyway
+    (convolution via pointwise multiply, power spectra, ...).
+
+    With ``mesh=None`` or a 1-sized axis this is exactly the local transform.
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is None or mesh.shape[axis] == 1:
+        from . import stockham
+        return stockham.ifft(x) if inverse else stockham.fft(x)
+    return _dist_fft_fn(mesh, axis, inverse, natural_order)(x)
+
+
+def distributed_ifft(x: jax.Array, mesh: Mesh | None = None, *,
+                     axis: str = FFT_AXIS) -> jax.Array:
+    """Inverse of :func:`distributed_fft` (normalized by 1/N)."""
+    return distributed_fft(x, mesh, axis=axis, inverse=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded two-side ABFT
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistFFTResult:
+    """Corrected outputs + FT telemetry of one sharded ft transform."""
+
+    y: jax.Array            # (B, N) corrected outputs, natural order
+    shard_delta: jax.Array  # (D,) per-shard local left-checksum residual
+    score: jax.Array        # scalar relative right-checksum divergence
+    flagged: jax.Array      # scalar bool — an error was detected
+    location: jax.Array     # scalar int32 — decoded corrupted signal index
+    corrected: jax.Array    # scalar int32 — corrections applied (0 or 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool):
+    shards = mesh.shape[axis]
+
+    @jax.jit
+    def run(x, inject):  # x: (B, N) complex; inject: (7,) float32
+        b, n = x.shape
+        plan = make_dist_plan(n, shards, axis)
+        n1, n2 = plan.n1, plan.n2
+        tw = jnp.asarray(factors.stage_twiddle(n1, n2, inverse=False),
+                         dtype=x.dtype)
+        # right-side encodings over the batch: e2 = ones (correction value),
+        # e3 = 1-based ids (location) — twoside.py's pipeline, here applied
+        # along the *unsharded* batch axis so building them is local too.
+        ftype = np.float64 if x.dtype == jnp.complex128 else np.float32
+        ids = jnp.arange(1, b + 1, dtype=ftype)
+        z = x.reshape((b, n1, n2))
+
+        def body(zl):
+            d = jax.lax.axis_index(axis)
+            n2l = zl.shape[-1]
+            # input checksums ride as 2 extra rows: (B+2, n1, n2l)
+            cs2_in = jnp.sum(zl, axis=0, keepdims=True)
+            cs3_in = jnp.sum(ids[:, None, None] * zl, axis=0, keepdims=True)
+            zc = jnp.concatenate([zl, cs2_in, cs3_in], axis=0)
+            # ---- pass 1: FFT over n1 (local) + left checksum --------------
+            zt = jnp.swapaxes(zc, -1, -2)
+            zf = block_fft_stages(zt, inverse=False)
+            # sum_k1 W[k1, n1] = n1*delta(n1): column sums predict from x[0]
+            res1 = jnp.abs(jnp.sum(zf, axis=-1) - n1 * zt[..., 0])
+            scale1 = jnp.sqrt(jnp.mean(jnp.abs(zt) ** 2, axis=-1)) + EPS
+            delta = jnp.max(res1 / (jnp.sqrt(jnp.float32(n1)) * scale1))
+            zc = jnp.swapaxes(zf, -1, -2)                # (B+2, n1, n2l)
+            twl = jax.lax.dynamic_slice_in_dim(tw, d * n2l, n2l, axis=1)
+            zc = zc * twl
+            # ---- fault injection (tests/benchmarks): one SEU on device
+            # inject[0], data row inject[1], element (row inject[2],
+            # local col inject[3]) of the pass-1 output --------------------
+            dev, sig, row, col, enable, er, ei = (inject[i] for i in range(7))
+            eps = (er + 1j * ei).astype(zc.dtype)
+            hit = enable * (jax.lax.axis_index(axis) == dev.astype(jnp.int32))
+            onehot = (
+                (jnp.arange(b + 2) == sig.astype(jnp.int32))[:, None, None]
+                * (jnp.arange(n1) == row.astype(jnp.int32))[None, :, None]
+                * (jnp.arange(n2l) == col.astype(jnp.int32))[None, None, :])
+            zc = zc + eps * hit.astype(zc.real.dtype) * onehot.astype(
+                zc.real.dtype)
+            # ---- the one collective: transpose between passes -------------
+            zc = jax.lax.all_to_all(zc, axis, split_axis=1, concat_axis=2,
+                                    tiled=True)          # (B+2, n1/D, n2)
+            # ---- pass 2: FFT over n2 (local) + left checksum --------------
+            zf2 = _local_fft(zc, inverse=False)
+            res2 = jnp.abs(jnp.sum(zf2, axis=-1) - n2 * zc[..., 0])
+            scale2 = jnp.sqrt(jnp.mean(jnp.abs(zc) ** 2, axis=-1)) + EPS
+            delta = jnp.maximum(
+                delta, jnp.max(res2 / (jnp.sqrt(jnp.float32(n2)) * scale2)))
+            # ---- detect / locate: output checksums vs transported ones ----
+            yl = zf2[:b]
+            fcs2, fcs3 = zf2[b], zf2[b + 1]              # F(cs_in), sharded
+            cs2_out = jnp.sum(yl, axis=0)
+            cs3_out = jnp.sum(ids[:, None, None] * yl, axis=0)
+            d2 = fcs2 - cs2_out                          # == -eps_y, sharded
+            d3 = fcs3 - cs3_out                          # == -id_s * eps_y
+            stats = jnp.stack([
+                jnp.sum(d3 * jnp.conj(d2)).real,         # id numerator
+                jnp.sum(jnp.abs(d2) ** 2),               # id denominator
+                jnp.sum(jnp.abs(cs2_out) ** 2),          # output energy
+            ])
+            stats = jax.lax.psum(stats, axis)            # ONE psum, 3 scalars
+            num, den, energy = stats[0], stats[1], stats[2]
+            score = jnp.sqrt(den / n) / (jnp.sqrt(energy / n) + EPS)
+            flagged = score > threshold
+            loc = jnp.round(num / (den + EPS)).astype(jnp.int32) - 1
+            loc = jnp.clip(loc, 0, b - 1)
+            if correct:
+                # d2 is the local slice of -eps_y: elementwise repair of the
+                # located signal works no matter which shard holds the fault
+                upd = jnp.where(flagged, d2, jnp.zeros_like(d2))
+                yl = yl.at[loc].add(upd)
+            out_stats = jnp.stack([score, flagged.astype(score.dtype),
+                                   loc.astype(score.dtype)])
+            return yl, delta[None], out_stats[None]
+
+        yl, deltas, stats = shard_map(
+            body, mesh=mesh,
+            in_specs=P(None, None, axis),
+            out_specs=(P(None, axis, None), P(axis), P(axis, None)),
+            check_rep=False)(z)
+        y = jnp.swapaxes(yl, -1, -2).reshape((b, n))
+        score, flag, loc = stats[0, 0], stats[0, 1], stats[0, 2]
+        flagged = flag > 0.5
+        return DistFFTResult(
+            y=y, shard_delta=deltas, score=score, flagged=flagged,
+            location=loc.astype(jnp.int32),
+            corrected=(flagged & bool(correct)).astype(jnp.int32))
+
+    return run
+
+
+def ft_distributed_fft(
+    x: jax.Array,
+    mesh: Mesh | None = None,
+    *,
+    axis: str = FFT_AXIS,
+    threshold: float = 1e-4,
+    correct: bool = True,
+    inject: jax.Array | None = None,
+) -> DistFFTResult:
+    """Fault-tolerant sharded forward FFT (two-side ABFT across the mesh).
+
+    ``inject`` (optional, for tests/benchmarks) is a length-7 float vector
+    ``[device, signal, row, local_col, enable, eps_re, eps_im]`` adding one
+    SEU to the pass-1 output on the given device — the error then propagates
+    through the all-to-all and pass 2 exactly like a real mid-pipeline fault.
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    if x.ndim != 2:
+        raise ValueError(f"ft_distributed_fft expects (B, N), got {x.shape}")
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is None:
+        raise ValueError("ft_distributed_fft requires a mesh with an "
+                         f"'{axis}' axis (see launch.mesh.make_fft_mesh)")
+    if inject is None:
+        inject = jnp.zeros((7,), jnp.float32)
+    return _ft_dist_fft_fn(mesh, axis, float(threshold), bool(correct))(
+        x, jnp.asarray(inject, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# communication model
+# ---------------------------------------------------------------------------
+
+
+def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
+                      ft: bool = False, natural_order: bool = True) -> dict:
+    """Analytic per-device communication model of one distributed transform.
+
+    Three terms (cross-checked against the post-partitioning HLO by
+    benchmarks/fft_distributed.py):
+
+    * the inter-pass transpose: ONE all-to-all over the ``rows * N / D``
+      locally-resident elements, of which ``(D-1)/D`` actually cross a link;
+    * the natural-order redistribution: materializing ``k = k1 + N1*k2``
+      order gathers the full ``batch * N`` result (skipped entirely with
+      ``natural_order=False`` — checksum rows never pay it either);
+    * the ABFT verdict: one psum of 3 scalars — the mesh-level analogue of
+      the paper's amortized threadblock reduction. The checksum *signals*
+      add only ``2/batch`` relative all-to-all volume (they ride the same
+      transpose), which is the ``abft_overhead`` field.
+
+    ``*_wire`` entries are true link-crossing bytes; ``hlo_bytes`` is what
+    :func:`repro.launch.dryrun.collective_bytes` counts for the same program
+    (full per-device collective operand bytes, all-reduce at ring factor 2).
+    """
+    rows = batch + (2 if ft else 0)
+    a2a_local = rows * n * itemsize / shards
+    a2a_wire = a2a_local * (shards - 1) / shards
+    gather_hlo = batch * n * itemsize if natural_order else 0.0
+    gather_wire = gather_hlo * (shards - 1) / shards
+    psum_hlo = 2.0 * 3 * 4 if ft else 0.0
+    psum_wire = psum_hlo * (shards - 1) / shards
+    return {
+        "shards": shards,
+        "passes": 2,  # one distributed split -> exactly one transpose
+        "all_to_all_wire": a2a_wire,
+        "gather_wire": gather_wire,
+        "psum_wire": psum_wire,
+        "total_wire": a2a_wire + gather_wire + psum_wire,
+        "hlo_bytes": a2a_local + gather_hlo + psum_hlo,
+        "abft_overhead": (rows / batch) - 1.0 if batch else 0.0,
+    }

@@ -113,18 +113,52 @@ def _fft_impl(x, *, inverse=False, interpret=None):
     return y.reshape(shape)
 
 
-def fft(x, *, interpret=None):
-    """TurboFFT forward transform over the last axis (complex in/out)."""
+def _dispatch_mesh(x, mesh, axis):
+    """The mesh to distribute over, or None for the single-device path.
+
+    Distributed when the caller passes a mesh with a non-trivial ``axis``, or
+    when ``x`` is already committed to one (see parallel.fft_sharding).
+    """
+    from repro.parallel.fft_sharding import fft_mesh_axis, infer_fft_mesh
+
+    if mesh is not None and fft_mesh_axis(mesh, axis):
+        return mesh
+    if mesh is None:
+        return infer_fft_mesh(x, axis)
+    return None
+
+
+def fft(x, *, interpret=None, mesh=None, axis="fft"):
+    """TurboFFT forward transform over the last axis (complex in/out).
+
+    Passing ``mesh`` (with an ``axis`` mesh axis), or an ``x`` already
+    sharded over such a mesh, dispatches to the mesh-sharded pencil
+    decomposition (core.fft.distributed) instead of the local kernels.
+
+    Sharding-based auto-dispatch only works on concrete (eager) operands:
+    inside an enclosing ``jax.jit`` the tracer carries no committed
+    sharding, so pass ``mesh=`` explicitly there — otherwise the call
+    lowers to the local path (still correct, but partitioned by GSPMD
+    rather than the explicit one-all-to-all pipeline).
+    """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
+    m = _dispatch_mesh(x, mesh, axis)
+    if m is not None:
+        from repro.core.fft.distributed import distributed_fft
+        return distributed_fft(x, m, axis=axis)
     return _fft_impl(x, inverse=False, interpret=interpret)
 
 
-def ifft(x, *, interpret=None):
+def ifft(x, *, interpret=None, mesh=None, axis="fft"):
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
+    m = _dispatch_mesh(x, mesh, axis)
+    if m is not None:
+        from repro.core.fft.distributed import distributed_ifft
+        return distributed_ifft(x, m, axis=axis)
     return _fft_impl(x, inverse=True, interpret=interpret)
 
 

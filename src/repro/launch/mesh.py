@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_fft_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,3 +24,23 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         data, model = n, 1
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_fft_mesh(shards: int | None = None, data: int = 1):
+    """Mesh carrying the ``fft`` signal axis for the distributed transform.
+
+    ``shards`` devices along ``fft`` hold pencils of each signal (see
+    core/fft/distributed.py); an optional leading ``data`` axis batches
+    independent transforms. Defaults to all visible devices on ``fft``.
+    """
+    n = len(jax.devices())
+    if shards is None:
+        shards = max(1, n // data)
+    if data * shards > n:
+        data, shards = 1, n
+    # the pencil split needs a power-of-two shard count — round down so the
+    # default works on 3/5/6-device hosts (spare devices stay idle)
+    shards = 1 << (shards.bit_length() - 1)
+    if data > 1:
+        return jax.make_mesh((data, shards), ("data", "fft"))
+    return jax.make_mesh((shards,), ("fft",))

@@ -1,0 +1,64 @@
+"""Sharding glue for the distributed FFT (see core/fft/distributed.py).
+
+Keeps the mesh/spec plumbing out of the numerics module: helpers to detect an
+FFT-sharded operand (so ``kernels.ops.fft`` can auto-dispatch), to place a
+batch of signals into the pencil layout, and the canonical PartitionSpecs of
+the pipeline's two resident layouts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.fft.distributed import FFT_AXIS, make_dist_plan
+
+__all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
+           "shard_signals"]
+
+
+def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
+    """The FFT mesh axis name if ``mesh`` carries one (size > 1)."""
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return None
+    return axis if mesh.shape[axis] > 1 else None
+
+
+def infer_fft_mesh(x, axis: str = FFT_AXIS) -> Mesh | None:
+    """The mesh to distribute over, inferred from ``x``'s committed sharding.
+
+    Returns the mesh iff ``x`` lives on a NamedSharding whose mesh has a
+    non-trivial ``axis`` — the signal that the caller already laid the
+    operand out for a sharded transform.
+    """
+    try:
+        sh = getattr(x, "sharding", None)
+    except Exception:  # tracers inside jit have no concrete sharding
+        return None
+    if isinstance(sh, NamedSharding) and fft_mesh_axis(sh.mesh, axis):
+        return sh.mesh
+    return None
+
+
+def pencil_specs(axis: str = FFT_AXIS) -> tuple[P, P]:
+    """(input, inter-pass) PartitionSpecs of the (B, N1, N2) pencil cube:
+    columns (n2) sharded going in, rows (k1) sharded after the all-to-all."""
+    return P(None, None, axis), P(None, axis, None)
+
+
+def shard_signals(x, mesh: Mesh, axis: str = FFT_AXIS):
+    """Distribute a (..., N) batch: each device owns a contiguous ``N/D``
+    block of the signal axis (1/D of the memory footprint).
+
+    The transform's *pencil* layout (every ``n1`` row's ``n2``-columns on one
+    device) is strided in the flat axis and cannot be expressed as a
+    NamedSharding of the flat array, so the pipeline re-tiles these blocks
+    into pencils when the shard_map binds its input — the ingest relayout of
+    the classic block->pencil->pencil distributed FFT. Callers who keep data
+    in the (..., N1, N2) cube between transforms can place it with
+    ``pencil_specs()[0]`` directly and skip that ingest cost.
+    """
+    x = jnp.asarray(x)
+    make_dist_plan(x.shape[-1], mesh.shape[axis], axis)  # validate sizes
+    spec = P(*([None] * (x.ndim - 1) + [axis]))
+    return jax.device_put(x, NamedSharding(mesh, spec))

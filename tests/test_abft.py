@@ -1,4 +1,9 @@
-"""ABFT math + FT runtime: one-sided baseline, ABFT-GEMM, bit-flip model."""
+"""ABFT math + FT runtime: one-sided baseline, ABFT-GEMM, bit-flip model.
+
+Shared rng / complex-batch helpers come from conftest.py (``rng`` / ``crand``
+fixtures); the hypothesis property tests live in test_properties.py so this
+module collects without optional packages.
+"""
 import numpy as np
 import pytest
 
@@ -7,27 +12,20 @@ import jax.numpy as jnp
 from repro.core import abft
 from repro.core.ft import injection
 
-RNG = np.random.default_rng(42)
-
-
-def _rand(b, n, dtype=np.complex64):
-    x = RNG.standard_normal((b, n)) + 1j * RNG.standard_normal((b, n))
-    return x.astype(dtype)
-
 
 # ---------------------------------------------------------------------------
 # one-sided (offline) baseline
 # ---------------------------------------------------------------------------
 
-def test_oneside_clean():
-    x = _rand(8, 256)
+def test_oneside_clean(crand):
+    x = crand(8, 256)
     y, flags, nre = abft.oneside_fft(jnp.asarray(x))
     np.testing.assert_allclose(np.asarray(y), np.fft.fft(x), atol=1e-4)
     assert int(nre) == 0
 
 
-def test_oneside_detects_and_recomputes():
-    x = _rand(8, 256)
+def test_oneside_detects_and_recomputes(crand):
+    x = crand(8, 256)
 
     def corrupt(y):
         return y.at[3, 17].add(100.0 + 50j)
@@ -42,17 +40,17 @@ def test_oneside_detects_and_recomputes():
 # ABFT GEMM (the paper's scheme on the LM layers)
 # ---------------------------------------------------------------------------
 
-def test_ft_matmul_clean():
-    x = RNG.standard_normal((64, 32)).astype(np.float32)
-    w = RNG.standard_normal((32, 48)).astype(np.float32)
+def test_ft_matmul_clean(rng):
+    x = rng.standard_normal((64, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 48)).astype(np.float32)
     y, stats = abft.ft_matmul(jnp.asarray(x), jnp.asarray(w))
     np.testing.assert_allclose(np.asarray(y), x @ w, rtol=1e-5, atol=1e-4)
     assert float(stats["flagged"]) == 0.0
 
 
-def test_ft_matmul_detects_and_corrects():
-    x = RNG.standard_normal((64, 32)).astype(np.float32)
-    w = RNG.standard_normal((32, 48)).astype(np.float32)
+def test_ft_matmul_detects_and_corrects(rng):
+    x = rng.standard_normal((64, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 48)).astype(np.float32)
     inj = jnp.asarray([13.0, 7.0, 500.0])  # row 13, col 7, eps 500
     y, stats = abft.ft_matmul(jnp.asarray(x), jnp.asarray(w), inject=inj)
     assert float(stats["flagged"]) == 1.0
@@ -60,9 +58,9 @@ def test_ft_matmul_detects_and_corrects():
                                atol=1e-2 * np.abs(x @ w).max())
 
 
-def test_ft_matmul_bf16_compute_f32_checksums():
-    x = RNG.standard_normal((32, 64)).astype(np.float32)
-    w = RNG.standard_normal((64, 64)).astype(np.float32)
+def test_ft_matmul_bf16_compute_f32_checksums(rng):
+    x = rng.standard_normal((32, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
     xb = jnp.asarray(x, dtype=jnp.bfloat16)
     wb = jnp.asarray(w, dtype=jnp.bfloat16)
     y, stats = abft.ft_matmul(xb, wb, threshold=5e-2)
@@ -73,24 +71,24 @@ def test_ft_matmul_bf16_compute_f32_checksums():
 # bit-flip SEU model
 # ---------------------------------------------------------------------------
 
-def test_flip_bit_roundtrip_f32():
-    x = RNG.standard_normal((4, 4)).astype(np.float32)
+def test_flip_bit_roundtrip_f32(rng):
+    x = rng.standard_normal((4, 4)).astype(np.float32)
     y = injection.flip_bit(x, (1, 2), 30)
     assert y[1, 2] != x[1, 2]
     z = injection.flip_bit(y, (1, 2), 30)
     np.testing.assert_array_equal(z, x)  # involution
 
 
-def test_flip_bit_complex():
-    x = _rand(2, 4)
+def test_flip_bit_complex(crand):
+    x = crand(2, 4)
     y = injection.flip_bit(x, (0, 1), 40)  # imag-part bit
     assert y[0, 1].imag != x[0, 1].imag
     assert y[0, 1].real == x[0, 1].real
 
 
-def test_random_flip_eps_consistent():
-    x = _rand(4, 16)
-    y, (flat, bit), eps = injection.random_flip(RNG, x)
+def test_random_flip_eps_consistent(rng, crand):
+    x = crand(4, 16)
+    y, (flat, bit), eps = injection.random_flip(rng, x)
     idx = np.unravel_index(flat, x.shape)
     np.testing.assert_allclose(complex(y[idx]) - complex(x[idx]), eps)
 
@@ -105,21 +103,3 @@ def test_poisson_schedule_deterministic():
     assert float(d[3]) == 1.0
     d_off = s.for_step(-1)
     assert float(d_off[3]) == 0.0
-
-
-# hypothesis: ft_matmul detects any sufficiently large injected error
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=15, deadline=None)
-@given(row=st.integers(0, 63), col=st.integers(0, 47),
-       eps=st.floats(min_value=50.0, max_value=1e4))
-def test_property_ft_matmul_detects(row, col, eps):
-    rng = np.random.default_rng(row * 100 + col)
-    x = rng.standard_normal((64, 32)).astype(np.float32)
-    w = rng.standard_normal((32, 48)).astype(np.float32)
-    y, stats = abft.ft_matmul(jnp.asarray(x), jnp.asarray(w),
-                              inject=jnp.asarray([row, col, eps]))
-    assert float(stats["flagged"]) == 1.0
-    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=0,
-                               atol=2e-2 * np.abs(x @ w).max())

@@ -1,23 +1,10 @@
 """Distribution-layer tests on an 8-device host mesh (subprocess so the
 XLA device-count flag doesn't leak into other tests)."""
-import json
-import os
-import subprocess
-import sys
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_py
 
-
-def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=timeout)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+pytestmark = pytest.mark.slow  # every test compiles on an 8-way subprocess
 
 
 def test_param_specs_shard_and_run_training_step():

@@ -1,4 +1,8 @@
-"""Core FFT library: plans, pure-JAX Stockham, large-N driver vs numpy."""
+"""Core FFT library: plans, pure-JAX Stockham, large-N driver vs numpy.
+
+Shared rng / complex-batch / tolerance helpers come from conftest.py
+(``crand`` / ``assert_spectrum_close`` fixtures).
+"""
 import numpy as np
 import pytest
 
@@ -7,47 +11,32 @@ import jax.numpy as jnp
 from repro.core import fft as tfft
 
 
-RNG = np.random.default_rng(1234)
-
-
-def _rand(batch, n, dtype=np.complex64):
-    x = RNG.standard_normal((batch, n)) + 1j * RNG.standard_normal((batch, n))
-    return x.astype(dtype)
-
-
 @pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
                                2048, 4096, 8192])
-def test_fft_single_pass_matches_numpy(n):
-    x = _rand(4, n)
-    y = np.asarray(tfft.fft(x))
-    ref = np.fft.fft(x)
-    np.testing.assert_allclose(y, ref, rtol=0, atol=2e-5 * np.abs(ref).max())
+def test_fft_single_pass_matches_numpy(n, crand, assert_spectrum_close):
+    x = crand(4, n)
+    assert_spectrum_close(tfft.fft(x), np.fft.fft(x))
 
 
 @pytest.mark.parametrize("n", [1 << 14, 1 << 16, 1 << 17, 1 << 20])
-def test_fft_multi_pass_matches_numpy(n):
-    x = _rand(2, n)
-    y = np.asarray(tfft.fft(x))
-    ref = np.fft.fft(x)
-    np.testing.assert_allclose(y, ref, rtol=0, atol=4e-5 * np.abs(ref).max())
+def test_fft_multi_pass_matches_numpy(n, crand, assert_spectrum_close):
+    x = crand(2, n)
+    assert_spectrum_close(tfft.fft(x), np.fft.fft(x))
 
 
 @pytest.mark.parametrize("n", [64, 1024, 1 << 14])
-def test_ifft_roundtrip(n):
-    x = _rand(3, n)
-    y = np.asarray(tfft.ifft(tfft.fft(x)))
-    np.testing.assert_allclose(y, x, rtol=0, atol=2e-5 * np.abs(x).max())
+def test_ifft_roundtrip(n, crand, assert_spectrum_close):
+    x = crand(3, n)
+    assert_spectrum_close(tfft.ifft(tfft.fft(x)), x)
 
 
-def test_fft_complex128():
-    x = _rand(2, 1024, np.complex128)
-    y = np.asarray(tfft.fft(x))
-    ref = np.fft.fft(x)
-    np.testing.assert_allclose(y, ref, rtol=0, atol=1e-12 * np.abs(ref).max())
+def test_fft_complex128(crand, assert_spectrum_close):
+    x = crand(2, 1024, np.complex128)
+    assert_spectrum_close(tfft.fft(x), np.fft.fft(x))
 
 
-def test_naive_dft_and_radix2_agree():
-    x = _rand(2, 256)
+def test_naive_dft_and_radix2_agree(crand):
+    x = crand(2, 256)
     ref = np.fft.fft(x)
     np.testing.assert_allclose(np.asarray(tfft.naive_dft(jnp.asarray(x))), ref,
                                atol=3e-4 * np.abs(ref).max())
@@ -74,10 +63,10 @@ def test_block_radices_mxu_first():
         assert np.prod(tfft.block_radices(n)) == n
 
 
-def test_linearity():
+def test_linearity(rng, crand):
     # FFT linearity is the foundation of the two-sided ABFT (paper Eqn. 3)
-    a = _rand(4, 512)
-    e = (RNG.standard_normal(4) + 1j * RNG.standard_normal(4)).astype(
+    a = crand(4, 512)
+    e = (rng.standard_normal(4) + 1j * rng.standard_normal(4)).astype(
         np.complex64)
     lhs = np.asarray(tfft.fft(jnp.einsum("b,bn->n", jnp.asarray(e),
                                          jnp.asarray(a))))

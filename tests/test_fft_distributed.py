@@ -1,0 +1,176 @@
+"""Mesh-sharded distributed FFT: host-mesh equivalence, sharded ABFT,
+plan/volume invariants. Multi-device cases run in a subprocess (the XLA
+host-device-count flag must be set before jax initializes).
+"""
+import numpy as np
+import pytest
+
+from conftest import run_py
+
+# ---------------------------------------------------------------------------
+# in-process: plan + communication model + single-device fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ln", [4, 10, 14, 17, 20, 23])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_dist_plan_divisible(ln, shards):
+    from repro.core.fft.distributed import make_dist_plan
+
+    n = 1 << ln
+    if n < shards * shards:
+        pytest.skip("pencil needs N >= shards^2")
+    p = make_dist_plan(n, shards)
+    assert p.n1 * p.n2 == n
+    assert p.n1 % shards == 0 and p.n2 % shards == 0
+    assert p.local_in == (p.n1, p.n2 // shards)
+    assert p.local_out == (p.n1 // shards, p.n2)
+
+
+def test_dist_plan_rejects_bad_sizes():
+    from repro.core.fft.distributed import make_dist_plan
+
+    with pytest.raises(ValueError):
+        make_dist_plan(100, 2)  # not a power of two
+    with pytest.raises(ValueError):
+        make_dist_plan(1 << 14, 3)  # non-power-of-two shards
+    with pytest.raises(ValueError):
+        make_dist_plan(8, 4)  # N < shards^2
+
+
+def test_collective_volume_model():
+    """One all-to-all; ABFT adds 2/B volume + scalars; transposed order
+    skips the natural-order gather entirely."""
+    from repro.core.fft.distributed import collective_volume
+
+    n, b, d = 1 << 17, 8, 4
+    plain = collective_volume(n, b, d)
+    ft = collective_volume(n, b, d, ft=True)
+    transposed = collective_volume(n, b, d, natural_order=False)
+    assert plain["passes"] == 2
+    assert plain["all_to_all_wire"] == b * n * 8 / d * (d - 1) / d
+    assert ft["abft_overhead"] == pytest.approx(2 / b)
+    assert ft["all_to_all_wire"] == pytest.approx(
+        plain["all_to_all_wire"] * (b + 2) / b)
+    assert transposed["gather_wire"] == 0.0
+    assert transposed["total_wire"] < plain["total_wire"]
+
+
+def test_single_device_fallback_matches_local(crand, assert_spectrum_close):
+    """mesh=None (and ops.fft without a mesh) is exactly the local path."""
+    from repro.core.fft.distributed import distributed_fft
+    from repro.kernels import ops
+
+    x = crand(2, 1 << 10)
+    assert_spectrum_close(distributed_fft(x), np.fft.fft(x))
+    assert_spectrum_close(ops.fft(x), np.fft.fft(x))
+
+
+# ---------------------------------------------------------------------------
+# host-mesh equivalence (subprocess, 4 devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_distributed_fft_matches_numpy(shards):
+    """1/2/4-way shardings vs jnp.fft.fft over N = 2^14 .. 2^17, plus the
+    sharded ifft roundtrip and the transposed-order digit permutation."""
+    out = run_py(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.fft.distributed import (distributed_fft, distributed_ifft,
+                                        make_dist_plan)
+shards = {shards}
+mesh = jax.make_mesh((shards,), ("fft",)) if shards > 1 else None
+rng = np.random.default_rng(shards)
+for ln in (14, 15, 16, 17):
+    n = 1 << ln
+    x = (rng.standard_normal((2, n)) + 1j * rng.standard_normal((2, n))
+         ).astype(np.complex64)
+    ref = np.asarray(jnp.fft.fft(x))
+    y = np.asarray(distributed_fft(x, mesh))
+    err = np.abs(y - ref).max() / np.abs(ref).max()
+    assert err < 4e-5, (ln, err)
+    back = np.asarray(distributed_ifft(jnp.asarray(y), mesh))
+    rerr = np.abs(back - x).max() / np.abs(x).max()
+    assert rerr < 4e-5, (ln, rerr)
+    if mesh is not None:
+        # transposed order is the natural order under the (n1, n2) digit swap
+        p = make_dist_plan(n, shards)
+        yt = np.asarray(distributed_fft(x, mesh, natural_order=False))
+        perm = yt.reshape(2, p.n1, p.n2).transpose(0, 2, 1).reshape(2, n)
+        assert np.abs(perm - ref).max() / np.abs(ref).max() < 4e-5
+print('OK')
+""", devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_ops_fft_auto_dispatches_on_sharded_input():
+    """kernels.ops.fft routes to the distributed path when the operand is
+    committed to an fft-axis mesh (and when a mesh is passed explicitly)."""
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.kernels import ops
+from repro.launch.mesh import make_fft_mesh
+from repro.parallel import shard_signals, infer_fft_mesh
+mesh = make_fft_mesh(4)
+rng = np.random.default_rng(0)
+x = (rng.standard_normal((2, 1 << 14)) +
+     1j * rng.standard_normal((2, 1 << 14))).astype(np.complex64)
+ref = np.fft.fft(x)
+xs = shard_signals(x, mesh)
+assert infer_fft_mesh(xs) is mesh
+y1 = np.asarray(ops.fft(xs))             # inferred from committed sharding
+y2 = np.asarray(ops.fft(x, mesh=mesh))   # explicit mesh
+for y in (y1, y2):
+    assert np.abs(y - ref).max() / np.abs(ref).max() < 4e-5
+back = np.asarray(ops.ifft(jnp.asarray(y2), mesh=mesh))
+assert np.abs(back - x).max() / np.abs(x).max() < 4e-5
+print('OK')
+""", devices=4)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# sharded two-side ABFT (subprocess, 4 devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_abft_detects_and_corrects_nonlocal_fault():
+    """An SEU injected on device 2 mid-pipeline (after pass 1) is detected,
+    located to the right signal, and corrected — with the verdict reduced on
+    a *different* shard (device 0 reads it), proving the psum'd right-side
+    checksums work across the mesh. Clean runs never false-alarm."""
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.fft.distributed import ft_distributed_fft
+mesh = jax.make_mesh((4,), ("fft",))
+rng = np.random.default_rng(7)
+b, n = 8, 1 << 14
+x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
+     ).astype(np.complex64)
+ref = np.fft.fft(x)
+
+clean = ft_distributed_fft(x, mesh)
+assert not bool(clean.flagged), float(clean.score)
+assert float(jnp.max(clean.shard_delta)) < 1e-4
+assert np.abs(np.asarray(clean.y) - ref).max() / np.abs(ref).max() < 4e-5
+
+# device 2 holds the fault; the verdict consumed from shard 0's copy
+inj = jnp.asarray([2, 5, 7, 3, 1, 60.0, -25.0], jnp.float32)
+res = ft_distributed_fft(x, mesh, inject=inj)
+assert bool(res.flagged)
+assert int(res.location) == 5
+assert int(res.corrected) == 1
+err = np.abs(np.asarray(res.y) - ref).max() / np.abs(ref).max()
+assert err < 1e-4, err
+
+# without correction the propagated error persists in the output
+bad = ft_distributed_fft(x, mesh, inject=inj, correct=False)
+res_err = np.abs(np.asarray(bad.y) - ref).max() / np.abs(ref).max()
+assert res_err > 1e-2, res_err
+print('OK')
+""", devices=4)
+    assert "OK" in out

@@ -1,31 +1,46 @@
-"""rfft / fft2 / FT-protected inverse — library extensions vs numpy."""
+"""rfft / fft2 / FT-protected inverse — library extensions vs numpy, plus
+classical transform invariants (Parseval, time-shift) that pin down scaling
+and sign conventions independent of any reference implementation.
+"""
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
 
 from repro.core.fft.extensions import rfft, irfft, fft2, ifft2, ft_ifft
-
-RNG = np.random.default_rng(11)
+from repro.core import fft as tfft
 
 
 @pytest.mark.parametrize("n", [64, 256, 1024])
-def test_rfft_matches_numpy(n):
-    x = RNG.standard_normal((3, n)).astype(np.float32)
+def test_rfft_matches_numpy(n, rng):
+    x = rng.standard_normal((3, n)).astype(np.float32)
     got = np.asarray(rfft(jnp.asarray(x)))
     want = np.fft.rfft(x)
     np.testing.assert_allclose(got, want, atol=3e-4 * np.abs(want).max())
 
 
-def test_irfft_roundtrip():
-    x = RNG.standard_normal((2, 512)).astype(np.float32)
+def test_irfft_roundtrip(rng):
+    x = rng.standard_normal((2, 512)).astype(np.float32)
     got = np.asarray(irfft(rfft(jnp.asarray(x))))
     np.testing.assert_allclose(got, x, atol=2e-5 * np.abs(x).max())
 
 
-def test_fft2_matches_numpy():
-    x = (RNG.standard_normal((2, 64, 128)) +
-         1j * RNG.standard_normal((2, 64, 128))).astype(np.complex64)
+def test_irfft_explicit_n(rng):
+    """Explicit ``n``: the default is recoverable by passing it, and a
+    shorter n truncates the reconstructed signal (the documented semantics
+    — unlike numpy, which crops the *spectrum* first)."""
+    x = rng.standard_normal((2, 512)).astype(np.float32)
+    y = rfft(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(irfft(y, n=512)),
+                               np.fft.irfft(np.asarray(y), n=512),
+                               atol=2e-5 * np.abs(x).max())
+    got = np.asarray(irfft(y, n=500))
+    assert got.shape == (2, 500)
+    np.testing.assert_allclose(got, x[:, :500], atol=2e-5 * np.abs(x).max())
+
+
+def test_fft2_matches_numpy(crand):
+    x = crand(2 * 64, 128).reshape(2, 64, 128)
     got = np.asarray(fft2(jnp.asarray(x)))
     want = np.fft.fft2(x)
     np.testing.assert_allclose(got, want, atol=4e-5 * np.abs(want).max())
@@ -33,9 +48,57 @@ def test_fft2_matches_numpy():
     np.testing.assert_allclose(back, x, atol=2e-6 * np.abs(x).max())
 
 
-def test_ft_ifft_detects_and_corrects():
-    x = (RNG.standard_normal((16, 256)) +
-         1j * RNG.standard_normal((16, 256))).astype(np.complex64)
+@pytest.mark.parametrize("rows,cols", [(32, 256), (256, 32), (16, 1024)])
+def test_fft2_rectangular(rows, cols, crand, assert_spectrum_close):
+    """Non-square grids in both orientations: the row pass and column pass
+    must each use their own axis length (catches any transposed-plan mixup)."""
+    x = crand(rows, cols).reshape(1, rows, cols)
+    assert_spectrum_close(fft2(jnp.asarray(x)), np.fft.fft2(x))
+    assert_spectrum_close(ifft2(fft2(jnp.asarray(x))), x)
+
+
+# ---------------------------------------------------------------------------
+# transform invariants (reference-free)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 4096, 1 << 14])
+def test_parseval(n, crand):
+    """sum |x|^2 == sum |X|^2 / N — energy conservation pins the 1/N
+    normalization split between fft and ifft."""
+    x = crand(3, n)
+    y = np.asarray(tfft.fft(x))
+    e_t = np.sum(np.abs(x) ** 2, axis=-1)
+    e_f = np.sum(np.abs(y) ** 2, axis=-1) / n
+    np.testing.assert_allclose(e_f, e_t, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shift", [1, 17, 255])
+def test_time_shift_theorem(shift, crand):
+    """fft(roll(x, s))[k] == fft(x)[k] * exp(-2*pi*i*k*s/N) — pins the
+    forward sign convention at every output index, not just index 0."""
+    n = 512
+    x = crand(2, n)
+    lhs = np.asarray(tfft.fft(np.roll(x, shift, axis=-1)))
+    k = np.arange(n)
+    phase = np.exp(-2j * np.pi * k * shift / n)
+    rhs = np.asarray(tfft.fft(x)) * phase
+    np.testing.assert_allclose(lhs, rhs, atol=4e-5 * np.abs(rhs).max())
+
+
+def test_rfft_hermitian_symmetry(rng):
+    """The half spectrum implies the full one: rfft output must equal the
+    first N/2+1 bins of the complex transform of the same real input."""
+    x = rng.standard_normal((2, 256)).astype(np.float32)
+    half = np.asarray(rfft(jnp.asarray(x)))
+    full = np.asarray(tfft.fft(x.astype(np.complex64)))
+    np.testing.assert_allclose(half, full[:, :129],
+                               atol=3e-4 * np.abs(full).max())
+
+
+def test_ft_ifft_detects_and_corrects(rng):
+    x = (rng.standard_normal((16, 256)) +
+         1j * rng.standard_normal((16, 256))).astype(np.complex64)
     inj = jnp.asarray([1, 2, 9, 1, 60.0, -10.0], jnp.float32)
     res = ft_ifft(jnp.asarray(x), transactions=2, bs=8, inject=inj)
     want = np.fft.ifft(x)

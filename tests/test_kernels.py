@@ -1,4 +1,9 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + FT properties."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + FT properties.
+
+Shared rng / complex-batch helpers come from conftest.py (``rng`` / ``crand``
+fixtures); the hypothesis property tests live in test_properties.py so this
+module collects without optional packages.
+"""
 import numpy as np
 import pytest
 
@@ -9,18 +14,11 @@ from repro.kernels import ops, ref
 from repro.kernels.stockham import block_fft_pallas
 from repro.kernels.stockham_abft import abft_fft_pallas
 
-RNG = np.random.default_rng(99)
-
-
-def _rand(b, n, dtype=np.complex64):
-    x = RNG.standard_normal((b, n)) + 1j * RNG.standard_normal((b, n))
-    return x.astype(dtype)
-
 
 @pytest.mark.parametrize("n", [128, 256, 512, 1024, 2048, 4096, 8192])
 @pytest.mark.parametrize("b,bs", [(8, 8), (32, 16)])
-def test_block_fft_kernel_sweep(n, b, bs):
-    x = _rand(b, n)
+def test_block_fft_kernel_sweep(n, b, bs, crand):
+    x = crand(b, n)
     yr, yi = block_fft_pallas(jnp.real(x), jnp.imag(x), bs=bs)
     got = np.asarray(yr) + 1j * np.asarray(yi)
     want = np.asarray(ref.fft_ref(jnp.asarray(x)))
@@ -28,23 +26,23 @@ def test_block_fft_kernel_sweep(n, b, bs):
 
 
 @pytest.mark.parametrize("n", [16, 64])  # small & non-128-aligned radices
-def test_block_fft_kernel_small_n(n):
-    x = _rand(8, n)
+def test_block_fft_kernel_small_n(n, crand):
+    x = crand(8, n)
     yr, yi = block_fft_pallas(jnp.real(x), jnp.imag(x), bs=8)
     got = np.asarray(yr) + 1j * np.asarray(yi)
     np.testing.assert_allclose(got, np.fft.fft(x), atol=2e-5 * n)
 
 
-def test_block_fft_kernel_fp64():
-    x = _rand(8, 1024, np.complex128)
+def test_block_fft_kernel_fp64(crand):
+    x = crand(8, 1024, np.complex128)
     yr, yi = block_fft_pallas(jnp.real(x), jnp.imag(x), bs=8)
     got = np.asarray(yr) + 1j * np.asarray(yi)
     want = np.fft.fft(x)
     np.testing.assert_allclose(got, want, atol=1e-12 * np.abs(want).max())
 
 
-def test_block_fft_kernel_inverse():
-    x = _rand(8, 512)
+def test_block_fft_kernel_inverse(crand):
+    x = crand(8, 512)
     yr, yi = block_fft_pallas(jnp.real(x), jnp.imag(x), bs=8, inverse=True)
     got = np.asarray(yr) + 1j * np.asarray(yi)
     want = np.fft.ifft(x)
@@ -52,15 +50,15 @@ def test_block_fft_kernel_inverse():
 
 
 @pytest.mark.parametrize("n", [1 << 14, 1 << 17])
-def test_ops_fft_multipass(n):
-    x = _rand(2, n)
+def test_ops_fft_multipass(n, crand):
+    x = crand(2, n)
     got = np.asarray(ops.fft(x))
     want = np.fft.fft(x)
     np.testing.assert_allclose(got, want, atol=4e-5 * np.abs(want).max())
 
 
-def test_ops_ifft_roundtrip():
-    x = _rand(4, 2048)
+def test_ops_ifft_roundtrip(crand):
+    x = crand(4, 2048)
     got = np.asarray(ops.ifft(ops.fft(x)))
     np.testing.assert_allclose(got, x, atol=2e-6 * np.abs(x).max())
 
@@ -71,8 +69,8 @@ def test_ops_ifft_roundtrip():
 
 @pytest.mark.parametrize("transactions", [1, 2, 4])
 @pytest.mark.parametrize("per_signal", [True, False])
-def test_abft_fft_clean_no_false_alarm(transactions, per_signal):
-    x = _rand(32, 512)
+def test_abft_fft_clean_no_false_alarm(transactions, per_signal, crand):
+    x = crand(32, 512)
     res = ops.ft_fft(x, transactions=transactions, bs=8,
                      per_signal=per_signal)
     want = np.fft.fft(x)
@@ -85,9 +83,9 @@ def test_abft_fft_clean_no_false_alarm(transactions, per_signal):
 
 
 @pytest.mark.parametrize("transactions", [1, 2, 4])
-def test_abft_fft_detect_locate_correct(transactions):
+def test_abft_fft_detect_locate_correct(transactions, crand):
     b, n, bs = 32, 512, 8
-    x = _rand(b, n)
+    x = crand(b, n)
     want = np.fft.fft(x)
     tile, row, col = 2, 5, 37
     sig = tile * bs + row
@@ -106,9 +104,9 @@ def test_abft_fft_detect_locate_correct(transactions):
                                atol=5e-5 * np.abs(want).max())
 
 
-def test_abft_fft_correction_disabled_keeps_error():
+def test_abft_fft_correction_disabled_keeps_error(crand):
     b, n, bs = 16, 256, 8
-    x = _rand(b, n)
+    x = crand(b, n)
     inj = jnp.asarray([0, 0, 0, 1, 100.0, 0.0], dtype=jnp.float32)
     res = ops.ft_fft(x, transactions=1, bs=bs, correct=False, inject=inj)
     err = np.abs(np.asarray(res.y) - np.fft.fft(x)).max()
@@ -116,8 +114,8 @@ def test_abft_fft_correction_disabled_keeps_error():
     assert np.asarray(res.flagged).any()
 
 
-def test_abft_fft_fp64():
-    x = _rand(16, 1024, np.complex128)
+def test_abft_fft_fp64(crand):
+    x = crand(16, 1024, np.complex128)
     inj = jnp.asarray([1, 2, 3, 1, 7.0, -3.0], dtype=jnp.float32)
     res = ops.ft_fft(x, transactions=2, bs=8, inject=inj, threshold=1e-8)
     want = np.fft.fft(x)
@@ -126,51 +124,17 @@ def test_abft_fft_fp64():
     assert int(res.corrected) == 1
 
 
-def test_abft_multi_transaction_checksum_equivalence():
+def test_abft_multi_transaction_checksum_equivalence(crand):
     """T transactions accumulate exactly the same group checksums as T=1
     over the same signals (paper §4.3: 'the workload of ABFT remains the
     same'), so detection behaviour is transaction-count invariant."""
-    x = _rand(32, 256)
+    x = crand(32, 256)
     r1 = ops.ft_fft(x, transactions=1, bs=32)
     r4 = ops.ft_fft(x, transactions=4, bs=8)
     np.testing.assert_allclose(np.asarray(r1.group_score),
                                np.asarray(r4.group_score), atol=1e-5)
     np.testing.assert_allclose(np.asarray(r1.y), np.asarray(r4.y),
                                atol=1e-5 * np.abs(np.asarray(r1.y)).max())
-
-
-# ---------------------------------------------------------------------------
-# Property-based: any injected error above the noise floor is detected,
-# located, and corrected (hypothesis)
-# ---------------------------------------------------------------------------
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    tile=st.integers(0, 3),
-    row=st.integers(0, 7),
-    col=st.integers(0, 255),
-    eps_r=st.floats(-200, 200),
-    eps_i=st.floats(-200, 200),
-    txn=st.sampled_from([1, 2, 4]),
-)
-def test_property_seu_detect_correct(tile, row, col, eps_r, eps_i, txn):
-    from hypothesis import assume
-    assume(abs(eps_r) + abs(eps_i) > 5.0)  # above noise floor
-    b, n, bs = 32, 256, 8
-    rng = np.random.default_rng(tile * 1000 + row * 100 + col)
-    x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
-         ).astype(np.complex64)
-    want = np.fft.fft(x)
-    inj = jnp.asarray([tile, row, col, 1, eps_r, eps_i], dtype=jnp.float32)
-    res = ops.ft_fft(x, transactions=txn, bs=bs, inject=inj)
-    sig = tile * bs + row
-    flagged = np.asarray(res.flagged)
-    assert flagged.sum() == 1
-    assert np.asarray(res.location)[int(np.argmax(flagged))] == sig
-    np.testing.assert_allclose(np.asarray(res.y), want,
-                               atol=1e-4 * np.abs(want).max())
 
 
 # ---------------------------------------------------------------------------

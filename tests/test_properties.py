@@ -1,0 +1,59 @@
+"""Property-based FT tests (hypothesis). The whole module skips cleanly when
+hypothesis is not installed — the deterministic versions of these contracts
+live in test_abft.py / test_kernels.py, so collection never depends on an
+optional package.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import abft  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+
+# hypothesis: ft_matmul detects any sufficiently large injected error
+@settings(max_examples=15, deadline=None)
+@given(row=st.integers(0, 63), col=st.integers(0, 47),
+       eps=st.floats(min_value=50.0, max_value=1e4))
+def test_property_ft_matmul_detects(row, col, eps):
+    rng = np.random.default_rng(row * 100 + col)
+    x = rng.standard_normal((64, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 48)).astype(np.float32)
+    y, stats = abft.ft_matmul(jnp.asarray(x), jnp.asarray(w),
+                              inject=jnp.asarray([row, col, eps]))
+    assert float(stats["flagged"]) == 1.0
+    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=0,
+                               atol=2e-2 * np.abs(x @ w).max())
+
+
+# hypothesis: any injected FFT error above the noise floor is detected,
+# located, and corrected by the fused two-sided ABFT kernel
+@settings(max_examples=20, deadline=None)
+@given(
+    tile=st.integers(0, 3),
+    row=st.integers(0, 7),
+    col=st.integers(0, 255),
+    eps_r=st.floats(-200, 200),
+    eps_i=st.floats(-200, 200),
+    txn=st.sampled_from([1, 2, 4]),
+)
+def test_property_seu_detect_correct(tile, row, col, eps_r, eps_i, txn):
+    assume(abs(eps_r) + abs(eps_i) > 5.0)  # above noise floor
+    b, n, bs = 32, 256, 8
+    rng = np.random.default_rng(tile * 1000 + row * 100 + col)
+    x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
+         ).astype(np.complex64)
+    want = np.fft.fft(x)
+    inj = jnp.asarray([tile, row, col, 1, eps_r, eps_i], dtype=jnp.float32)
+    res = ops.ft_fft(x, transactions=txn, bs=bs, inject=inj)
+    sig = tile * bs + row
+    flagged = np.asarray(res.flagged)
+    assert flagged.sum() == 1
+    assert np.asarray(res.location)[int(np.argmax(flagged))] == sig
+    np.testing.assert_allclose(np.asarray(res.y), want,
+                               atol=1e-4 * np.abs(want).max())

@@ -135,6 +135,7 @@ def test_checkpoint_atomic_no_tmp_left(tmp_path):
 # train loop end-to-end (tiny model learns the synthetic stream)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_train_loop_loss_decreases(tmp_path):
     cfg = dataclasses.replace(get_smoke_config("gemma3_1b"),
                               vocab_size=256, num_layers=4)
@@ -154,6 +155,7 @@ def test_train_loop_loss_decreases(tmp_path):
     assert all(np.isfinite(losses))
 
 
+@pytest.mark.slow
 def test_train_restart_determinism(tmp_path):
     """checkpoint/restart reproduces the uninterrupted run exactly."""
     cfg = dataclasses.replace(get_smoke_config("phi3_medium_14b"),
@@ -185,6 +187,7 @@ def test_train_restart_determinism(tmp_path):
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_microbatched_matches_full_batch():
     cfg = dataclasses.replace(get_smoke_config("phi4_mini_3p8b"),
                               vocab_size=128, num_layers=2)

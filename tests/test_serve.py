@@ -11,6 +11,9 @@ from repro.configs import get_smoke_config
 from repro.launch.serve import decode
 from repro.models import Model
 
+# token-by-token decode loops against full model configs dominate wall time
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ["gemma3_1b", "recurrentgemma_2b",
                                   "deepseek_v3_671b"])
