@@ -9,6 +9,12 @@ For each (N, batch, shards) cell this measures three things:
   must agree, which is the point: ONE all-to-all per transform, ABFT adding
   only the 2/B checksum rows plus a 3-scalar psum.
 
+The ABFT model==HLO assertion runs for BOTH complex64 and complex128 (the
+verdict psum scalars are f32 vs f64 — the model derives their width from
+``itemsize``). The transposed-order spectral pipeline (fft_convolve /
+round-trip ifft(fft)) is verified to lower to exactly TWO all-to-alls and
+ZERO all-gathers, with bytes matching ``spectral_volume``.
+
 Standalone runs force a multi-device host platform:
 
     PYTHONPATH=src python -m benchmarks.fft_distributed
@@ -29,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import fft as tfft
 from repro.core.fft import distributed as dist
+from repro.core.fft import spectral as spec
 from repro.launch.dryrun import collective_bytes
 
 from .common import emit, fft_gflops, timeit
@@ -78,19 +85,54 @@ def run(smoke: bool = True):
         meas_ft = _measured_collectives(
             dist._ft_dist_fft_fn(mesh, "fft", 1e-4, True), xj,
             jnp.zeros((7,), jnp.float32))
+        # fp64: the ABFT verdict psum carries f64 scalars — the model must
+        # track the itemsize instead of assuming 4-byte reductions
+        x128 = jnp.asarray(x.astype(np.complex128))
+        meas_ft64 = _measured_collectives(
+            dist._ft_dist_fft_fn(mesh, "fft", 1e-4, True), x128,
+            jnp.zeros((7,), jnp.float64))
         model = dist.collective_volume(n, b, shards)
         model_t = dist.collective_volume(n, b, shards, natural_order=False)
         model_ft = dist.collective_volume(n, b, shards, ft=True)
+        model_ft64 = dist.collective_volume(n, b, shards, ft=True,
+                                            itemsize=16)
+        # transposed-order round trip + fused convolve: exactly 2 all-to-alls
+        # and zero all-gathers (the batch-split inverse needs D | batch for
+        # a pad-free pipeline, so model==HLO only holds on those cells)
+        spectral_cells = []
+        if b % shards == 0:
+            rt = jax.jit(lambda v: dist.distributed_ifft(
+                dist.distributed_fft(v, mesh, natural_order=False), mesh,
+                natural_order=False))
+            meas_rt = _measured_collectives(rt, xj)
+            model_rt = dist.spectral_volume(n, b, shards)
+            vj = jnp.asarray((rng.standard_normal((1, n)) +
+                              1j * rng.standard_normal((1, n))
+                              ).astype(np.complex64))
+            meas_cv = _measured_collectives(
+                spec._spectral_pair_fn(mesh, "fft", None, False), xj, vj)
+            model_cv = dist.spectral_volume(n, b, shards, kernel_batch=1)
+            spectral_cells = [("spectral_rt", meas_rt, model_rt),
+                              ("spectral_conv", meas_cv, model_cv)]
+            for tag, m, mdl in spectral_cells:
+                assert m["count"]["all-to-all"] == mdl["all_to_all_count"], (
+                    tag, m["count"])
+                assert m["count"]["all-gather"] == 0, (tag, m["count"])
 
         emit(f"distfft_N2^{ln}_b{b}_x{shards}", t_d * 1e6,
              f"{fft_gflops(n, b, t_d):.2f}GF/s;vs_single={t_1/t_d:.2f}x;"
              f"ft_overhead={(t_ft - t_d)/t_d:+.1%}")
-        for tag, m, mdl in (("natural", meas, model),
+        for tag, m, mdl in [("natural", meas, model),
                             ("transposed", meas_t, model_t),
-                            ("ft", meas_ft, model_ft)):
+                            ("ft", meas_ft, model_ft),
+                            ("ft_c128", meas_ft64, model_ft64),
+                            ] + spectral_cells:
             got = m.get("total_bytes", 0.0)
             want = mdl["hlo_bytes"]
             agree = got / want if want else float("nan")
+            # hard model==HLO check (0.1% slack covers the HLO parser
+            # counting the psum's async start/done tuple twice — O(100B))
+            assert want and abs(agree - 1.0) < 1e-3, (tag, got, want)
             emit(f"distfft_N2^{ln}_b{b}_wire_{tag}", got,
                  f"model={want:.0f}B;hlo/model={agree:.3f};"
                  f"wire={mdl['total_wire']:.0f}B")

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .stockham import fft as _fft, ifft as _ifft
+from .stockham import fft as _fft, ifft as _ifft, naive_dft
 
 __all__ = ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
 
@@ -39,10 +39,31 @@ def rfft(x: jax.Array) -> jax.Array:
 
 
 def irfft(y: jax.Array, n: int | None = None) -> jax.Array:
-    """Inverse of rfft: (..., N/2+1) half spectrum -> (..., N) real."""
+    """Inverse of rfft: (..., N/2+1) half spectrum -> (..., N) real.
+
+    Even ``n`` keeps this library's documented semantics: reconstruct the
+    ``2*(len-1)``-point signal and truncate it to ``n`` samples. Odd ``n``
+    is a genuinely different transform — the spectrum then has no Nyquist
+    bin and the Hermitian tail is ``conj(y[..., 1:][..., ::-1])``, not the
+    even-length tail (truncating the even reconstruction silently returns
+    wrong values). For odd ``n`` we therefore crop to the ``(n+1)//2`` bins
+    an odd-length real signal has (numpy's convention) and invert exactly;
+    the odd full length is outside the power-of-two Stockham planner, so
+    that branch runs the O(n^2) direct inverse DFT.
+    """
     y = jnp.asarray(y)
     if n is None:
         n = 2 * (y.shape[-1] - 1)
+    if n % 2:
+        m = (n + 1) // 2   # bins of an odd-length real signal
+        if y.shape[-1] < m:
+            raise ValueError(
+                f"irfft: spectrum has {y.shape[-1]} bins but odd n={n} "
+                f"needs at least {m}")
+        yh = y[..., :m]
+        tail = jnp.conj(yh[..., 1:][..., ::-1])
+        full = jnp.concatenate([yh, tail], axis=-1)     # length n, odd
+        return jnp.real(naive_dft(full, inverse=True))
     # reconstruct the full spectrum by Hermitian symmetry, ifft, take real
     tail = jnp.conj(y[..., 1:-1][..., ::-1])
     full = jnp.concatenate([y, tail], axis=-1)

@@ -1,0 +1,285 @@
+"""Transposed-order spectral consumers: convolution, correlation, spectra.
+
+The paper's own FFT use cases (convolution, spectrum estimation) never look
+at the *order* of the frequency bins — they apply a pointwise op and come
+straight back. "Coded FFT and Its Communication Overhead" (Jeong et al.)
+shows the natural-order redistribution dominates distributed FFT cost, so
+everything here stays in the FFTW-MPI transposed digit order
+``y[k1*N2 + k2] = X[k1 + N1*k2]`` end-to-end on the sharded path:
+
+    forward  : pass 1 -> twiddle -> all-to-all -> pass 2   (transposed out)
+    pointwise: multiply / conjugate-multiply / |.|^2       (shard-local)
+    inverse  : pass A -> conj twiddle -> all-to-all -> pass B (transposed in)
+
+The two transforms of a convolution's operands ride ONE all-to-all (the
+kernel's rows are stacked onto the batch before the collective), and the
+inverse's all-to-all splits the batch axis, so the whole round trip is
+exactly TWO all-to-all ops and ZERO all-gathers — verified against the
+post-partitioning HLO by benchmarks/fft_distributed.py and modeled by
+:func:`repro.core.fft.distributed.spectral_volume`.
+
+On a 2-D batch x pencil mesh (``launch.mesh.make_fft_mesh(shards, data)``)
+batch rows shard over ``data`` while signal pencils shard over ``fft``; the
+collectives stay within the ``fft`` axis. Without a mesh every function
+falls back to the local Stockham transforms (same math, natural order).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import factors
+from .distributed import (_AUTO, FFT_AXIS, _local_fft, _pad_batch_rows,
+                          _resolve_data_axis, _resolve_mesh, distributed_fft,
+                          make_dist_plan)
+from .stockham import block_fft_stages, fft as _fft, ifft as _ifft
+
+__all__ = ["fft_convolve", "correlate", "power_spectrum"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+def _result_dtypes(a, v):
+    """(compute complex dtype, whether the result should be real)."""
+    wide = (a.dtype in (jnp.float64, jnp.complex128)
+            or v.dtype in (jnp.float64, jnp.complex128))
+    cdtype = jnp.complex128 if wide else jnp.complex64
+    real = not (jnp.issubdtype(a.dtype, jnp.complexfloating)
+                or jnp.issubdtype(v.dtype, jnp.complexfloating))
+    return cdtype, real
+
+
+def _crop(full, la: int, lv: int, mode: str):
+    """numpy convolve/correlate mode cropping of the length la+lv-1 result.
+
+    The signal axis of ``full`` is unsharded on every path (the inverse
+    leaves whole signals resident per device), so these slices are local.
+    """
+    lmin, lmax = min(la, lv), max(la, lv)
+    if mode == "full":
+        return full
+    if mode == "same":
+        start = (lmin - 1) // 2
+        return full[..., start:start + lmax]
+    if mode == "valid":
+        return full[..., lmin - 1:lmax]
+    raise ValueError(f"mode must be full|same|valid, got {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# the fused sharded pipeline
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _spectral_pair_fn(mesh: Mesh, axis: str, data_axis: str | None,
+                      conj_kernel: bool):
+    """forward(a, v) -> pointwise product -> inverse, one shard_map body.
+
+    Keeping everything in a single body is what pins the collective count:
+    the kernel's forward transform shares the batch all-to-all with the
+    signals', and no intermediate ever leaves the pencil layout.
+    """
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[data_axis] if data_axis else 1
+
+    @jax.jit
+    def run(a, v):  # a: (B, N), v: (BK, N) complex, BK in {1, B}
+        b, n = a.shape
+        bk = v.shape[0]
+        plan = make_dist_plan(n, shards, axis)
+        n1, n2 = plan.n1, plan.n2
+        tw_f = jnp.asarray(factors.stage_twiddle(n1, n2, inverse=False),
+                           dtype=a.dtype)
+        tw_i = jnp.asarray(factors.stage_twiddle(n1, n2, inverse=True),
+                           dtype=a.dtype)
+        za = a.reshape((b, n1, n2))
+        zv = v.reshape((bk, n1, n2))
+        bspec = data_axis if (data_axis and b % dsize == 0) else None
+        vspec = bspec if bk == b else None
+        bloc = b // (dsize if bspec else 1)
+        if bloc % shards:
+            raise ValueError(
+                f"spectral pipeline needs batch divisible by "
+                f"{'data*shards' if bspec else 'shards'}, got {b} — "
+                f"fft_convolve/correlate pad the batch automatically")
+
+        def body(al, vl):
+            d = jax.lax.axis_index(axis)
+            ba = al.shape[0]
+            n2l = al.shape[-1]
+            # ---- forward, both operands stacked: ONE all-to-all ----------
+            zc = jnp.concatenate([al, vl], axis=0)
+            zc = jnp.swapaxes(zc, -1, -2)
+            zc = block_fft_stages(zc, inverse=False)     # FFT over n1
+            zc = jnp.swapaxes(zc, -1, -2)
+            twl = jax.lax.dynamic_slice_in_dim(tw_f, d * n2l, n2l, axis=1)
+            zc = zc * twl
+            zc = jax.lax.all_to_all(zc, axis, split_axis=1, concat_axis=2,
+                                    tiled=True)          # (BA+BK, n1/D, n2)
+            zc = _local_fft(zc, inverse=False)           # FFT over n2
+            # ---- pointwise in transposed order (shard-local) -------------
+            ya, yv = zc[:ba], zc[ba:]
+            if conj_kernel:
+                yv = jnp.conj(yv)
+            prod = ya * yv                               # BK==1 broadcasts
+            # ---- inverse from transposed order: batch-split a2a ----------
+            prod = _local_fft(prod, inverse=True)        # IFFT over k2
+            n1l = prod.shape[-2]
+            twi = jax.lax.dynamic_slice_in_dim(tw_i, d * n1l, n1l, axis=0)
+            prod = prod * twi
+            prod = jax.lax.all_to_all(prod, axis, split_axis=0, concat_axis=1,
+                                      tiled=True)        # (BA/D, n1, n2)
+            prod = jnp.swapaxes(prod, -1, -2)
+            prod = _local_fft(prod, inverse=True)        # IFFT over k1
+            prod = jnp.swapaxes(prod, -1, -2)            # natural (n1, n2)
+            return prod.reshape(prod.shape[0], n) / n
+
+        out = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None, axis), P(vspec, None, axis)),
+            out_specs=P((bspec, axis) if bspec else axis, None),
+            check_rep=False)(za, zv)
+        return out
+
+    return run
+
+
+def _pad_tail(x, n: int):
+    """Zero-pad the last axis to length n."""
+    pad = n - x.shape[-1]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def _spectral_pair(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
+                   out_len: int):
+    """Shared driver: pad, dispatch local vs fused sharded path, crop.
+
+    Returns the length ``out_len`` head of the circular product's inverse
+    (linear results need nfft >= la + lv - 1, which callers guarantee).
+    """
+    cdtype, _ = _result_dtypes(a, v)
+    a = jnp.asarray(a, cdtype)
+    v = jnp.asarray(v, cdtype)
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is None or mesh.shape[axis] == 1:
+        fv = _fft(v)
+        if conj_kernel:
+            fv = jnp.conj(fv)
+        return _ifft(_fft(a) * fv)[..., :out_len]
+    daxis = _resolve_data_axis(mesh, data_axis)
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[daxis] if daxis else 1
+    lead = a.shape[:-1]
+    n = a.shape[-1]
+    a2d = a.reshape((-1, n))
+    v2d = v.reshape((-1, n))
+    b, bk = a2d.shape[0], v2d.shape[0]
+    if bk not in (1, b):
+        raise ValueError(
+            f"kernel batch must be 1 or match the signal batch ({b}), "
+            f"got {bk}")
+    # pad the batch so the inverse's batch-split all-to-all divides evenly
+    # (padding rows are zero signals; the slice below is free when b already
+    # divides, the common serving case)
+    a2d, _ = _pad_batch_rows(a2d, dsize, shards)
+    if bk == b:
+        v2d, _ = _pad_batch_rows(v2d, dsize, shards)
+    out = _spectral_pair_fn(mesh, axis, daxis, conj_kernel)(a2d, v2d)
+    if out.shape[0] != b:
+        out = out[:b]
+    return out[..., :out_len].reshape(lead + (out_len,))
+
+
+def _conv_nfft(la: int, lv: int, mesh, axis: str) -> int:
+    """FFT length for a linear result: power of two >= la + lv - 1, raised
+    to the mesh's minimum pencil size (shards^2) when sharded."""
+    nfft = _next_pow2(la + lv - 1)
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is not None and mesh.shape[axis] > 1:
+        nfft = max(nfft, mesh.shape[axis] ** 2)
+    return nfft
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def fft_convolve(a, v, mesh: Mesh | None = None, *, mode: str = "full",
+                 axis: str = FFT_AXIS,
+                 data_axis: str | None = _AUTO) -> jax.Array:
+    """Linear convolution along the last axis via the transposed pipeline.
+
+    Matches ``jnp.convolve`` (modes full/same/valid) batched over leading
+    dims; ``v`` is one kernel ``(Lv,)`` shared by the whole batch or a
+    per-signal batch matching ``a``'s leading dims. Real inputs give a real
+    result. On a mesh the whole op lowers to exactly two all-to-alls and
+    zero all-gathers (see module docstring); without one it runs the local
+    Stockham transforms.
+    """
+    a = jnp.asarray(a)
+    v = jnp.asarray(v)
+    _, real = _result_dtypes(a, v)
+    la, lv = a.shape[-1], v.shape[-1]
+    nfft = _conv_nfft(la, lv, mesh, axis)
+    full = _spectral_pair(_pad_tail(a, nfft), _pad_tail(v, nfft), mesh, axis,
+                          data_axis, conj_kernel=False, out_len=la + lv - 1)
+    out = _crop(full, la, lv, mode)
+    return out.real if real else out
+
+
+def correlate(a, v, mesh: Mesh | None = None, *, mode: str = "full",
+              axis: str = FFT_AXIS,
+              data_axis: str | None = _AUTO) -> jax.Array:
+    """Cross-correlation along the last axis: ``c[m] = sum_k a[m+k] *
+    conj(v[k])`` — ``np.correlate`` conventions (modes full/same/valid),
+    batched over leading dims. Same collective budget as
+    :func:`fft_convolve`: the conjugated kernel spectrum is pointwise in
+    transposed order too.
+    """
+    a = jnp.asarray(a)
+    v = jnp.asarray(v)
+    _, real = _result_dtypes(a, v)
+    la, lv = a.shape[-1], v.shape[-1]
+    nfft = _conv_nfft(la, lv, mesh, axis)
+    circ = _spectral_pair(_pad_tail(a, nfft), _pad_tail(v, nfft), mesh, axis,
+                          data_axis, conj_kernel=True, out_len=nfft)
+    # lag m = j - (lv - 1) for output index j: negative lags wrap to the
+    # tail of the circular result — a roll on the (unsharded) signal axis
+    full = jnp.roll(circ, lv - 1, axis=-1)[..., :la + lv - 1]
+    out = _crop(full, la, lv, mode)
+    return out.real if real else out
+
+
+def power_spectrum(x, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
+                   data_axis: str | None = _AUTO,
+                   natural_order: bool | None = None) -> jax.Array:
+    """Periodogram ``|X[k]|^2 / N`` along the last axis (real output).
+
+    On the sharded path the bins stay in the transposed digit order by
+    default (``natural_order=None`` -> False on a mesh): the |.|^2 is
+    elementwise, so the whole op is ONE all-to-all and zero all-gathers.
+    Order-agnostic consumers (total power, histograms, thresholds) never
+    notice; pass ``natural_order=True`` to pay the redistribution and get
+    numpy bin order. The local path is always natural order.
+    """
+    x = jnp.asarray(x)
+    n = x.shape[-1]
+    mesh_r = _resolve_mesh(mesh, axis)
+    on_mesh = mesh_r is not None and mesh_r.shape[axis] > 1
+    if natural_order is None:
+        natural_order = not on_mesh
+    y = distributed_fft(x, mesh_r, axis=axis, natural_order=natural_order,
+                        data_axis=data_axis)
+    return (jnp.abs(y) ** 2) / n

@@ -128,12 +128,19 @@ def _dispatch_mesh(x, mesh, axis):
     return None
 
 
-def fft(x, *, interpret=None, mesh=None, axis="fft"):
+def fft(x, *, interpret=None, mesh=None, axis="fft", natural_order=True):
     """TurboFFT forward transform over the last axis (complex in/out).
 
     Passing ``mesh`` (with an ``axis`` mesh axis), or an ``x`` already
     sharded over such a mesh, dispatches to the mesh-sharded pencil
     decomposition (core.fft.distributed) instead of the local kernels.
+    On a 2-D batch x pencil mesh the batch dims shard over the ``data``
+    axis automatically.
+
+    ``natural_order=False`` keeps the sharded result in the transposed
+    digit order (no final redistribution — see core.fft.distributed); on
+    the local path the flag is a no-op, since the local transform is
+    natural-order for free.
 
     Sharding-based auto-dispatch only works on concrete (eager) operands:
     inside an enclosing ``jax.jit`` the tracer carries no committed
@@ -147,18 +154,21 @@ def fft(x, *, interpret=None, mesh=None, axis="fft"):
     m = _dispatch_mesh(x, mesh, axis)
     if m is not None:
         from repro.core.fft.distributed import distributed_fft
-        return distributed_fft(x, m, axis=axis)
+        return distributed_fft(x, m, axis=axis, natural_order=natural_order)
     return _fft_impl(x, inverse=False, interpret=interpret)
 
 
-def ifft(x, *, interpret=None, mesh=None, axis="fft"):
+def ifft(x, *, interpret=None, mesh=None, axis="fft", natural_order=True):
+    """Inverse transform; ``natural_order=False`` on the mesh path consumes
+    TRANSPOSED-order input (the ``fft(..., natural_order=False)`` output)
+    and returns natural-order time domain with no all-gather."""
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
     m = _dispatch_mesh(x, mesh, axis)
     if m is not None:
         from repro.core.fft.distributed import distributed_ifft
-        return distributed_ifft(x, m, axis=axis)
+        return distributed_ifft(x, m, axis=axis, natural_order=natural_order)
     return _fft_impl(x, inverse=True, interpret=interpret)
 
 
@@ -213,7 +223,16 @@ def ft_fft(
     plan = make_plan(n, batch=b, itemsize=xr.dtype.itemsize)
     if bs is None:
         bs = min(plan.bs, b)
-    tiles = b // bs
+    # batches not divisible by bs are padded with zero signals (the same
+    # treatment _block_fft_c applies) — zero rows contribute nothing to the
+    # group checksums and their 1-based location ids lie beyond the real
+    # batch, so detection/location/correction are unaffected; the padded
+    # rows are sliced back off below. (b // bs alone silently dropped the
+    # remainder signals.)
+    xr, _ = _pad_batch(xr, bs)
+    xi, _ = _pad_batch(xi, bs)
+    bp = xr.shape[0]
+    tiles = bp // bs
     txn = min(transactions, tiles)
     while tiles % txn:
         txn -= 1
@@ -228,8 +247,8 @@ def ft_fft(
     if correct:
         y, _ = abft.apply_correction(y, verdict)
     return FTFFTResult(
-        y=y,
-        delta=delta,
+        y=y[:b],
+        delta=delta[:b],
         group_score=verdict.error_score,
         flagged=verdict.flagged,
         location=verdict.location,

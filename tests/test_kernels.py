@@ -124,6 +124,26 @@ def test_abft_fft_fp64(crand):
     assert int(res.corrected) == 1
 
 
+def test_abft_fft_ragged_batch(crand):
+    """Batches not divisible by bs pad with zero signals instead of silently
+    truncating the remainder (regression: tiles = b // bs dropped it, then
+    the kernel's b % bs assertion fired)."""
+    b, n, bs = 13, 256, 8   # prime batch, bs does not divide it
+    x = crand(b, n)
+    want = np.fft.fft(x)
+    res = ops.ft_fft(x, transactions=1, bs=bs)
+    assert res.y.shape == (b, n) and res.delta.shape == (b,)
+    assert not np.asarray(res.flagged).any()
+    np.testing.assert_allclose(np.asarray(res.y), want,
+                               atol=4e-5 * np.abs(want).max())
+    # detect -> locate -> correct still lands on the right (real) signal
+    inj = jnp.asarray([0, 2, 9, 1, 60.0, -10.0], dtype=jnp.float32)
+    res = ops.ft_fft(x, transactions=1, bs=bs, inject=inj)
+    assert int(res.corrected) == 1
+    np.testing.assert_allclose(np.asarray(res.y), want,
+                               atol=1e-4 * np.abs(want).max())
+
+
 def test_abft_multi_transaction_checksum_equivalence(crand):
     """T transactions accumulate exactly the same group checksums as T=1
     over the same signals (paper §4.3: 'the workload of ABFT remains the
