@@ -39,6 +39,7 @@ def main() -> None:
 
     from . import fft_distributed
     fft_distributed.run(smoke=smoke)
+    fft_distributed.run_mesh2d(smoke=smoke)
 
     if not args.skip_roofline:
         import os

@@ -16,12 +16,13 @@ __all__ += ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
 
 from .distributed import (DistPlan, DistFFTResult, make_dist_plan,  # noqa: E402
                           distributed_fft, distributed_ifft,
-                          ft_distributed_fft, collective_volume,
-                          spectral_volume, FFT_AXIS, DATA_AXIS)
+                          ft_distributed_fft, resolve_abft_groups,
+                          collective_volume, spectral_volume,
+                          FFT_AXIS, DATA_AXIS)
 
 __all__ += ["DistPlan", "DistFFTResult", "make_dist_plan", "distributed_fft",
-            "distributed_ifft", "ft_distributed_fft", "collective_volume",
-            "spectral_volume", "FFT_AXIS", "DATA_AXIS"]
+            "distributed_ifft", "ft_distributed_fft", "resolve_abft_groups",
+            "collective_volume", "spectral_volume", "FFT_AXIS", "DATA_AXIS"]
 
 from .spectral import fft_convolve, correlate, power_spectrum  # noqa: E402
 

@@ -22,9 +22,19 @@ class FTPolicy:
     protect_fft: bool = True
     protect_linears: bool = False
     threshold: float = 1e-4          # detection threshold delta (ROC-tuned)
-    transactions: int = 4            # multi-transaction group size
+    transactions: int = 4            # multi-transaction group size (kernel)
     per_signal: bool = False         # thread-level checksums on top
     encoding: str = "wang"
+    # mesh-path grouped ABFT (core.fft.distributed): the fault-tolerance
+    # contract is one SEU per checksum GROUP per pass, so more groups =
+    # more concurrent faults tolerated (at 2*G/B extra checksum traffic).
+    # None = auto (one group per data shard on a 2-D batch x pencil mesh).
+    mesh_groups: int | None = None   # explicit group count G, or
+    group_size: int | None = None    # signals per group (G = batch / this)
+    # a group hit by >1 fault decodes as uncorrectable; recompute just that
+    # group's rows with the plain pipeline (SEUs are transient, so the
+    # recompute is clean) instead of failing the whole transform
+    recompute_uncorrectable: bool = True
     # fail-stop (checkpoint/restart)
     checkpoint_every: int = 200
     keep_checkpoints: int = 3
@@ -36,6 +46,13 @@ class FTPolicy:
                     per_signal=self.per_signal,
                     encoding=self.encoding,
                     threshold=self.threshold)
+
+    def mesh_kwargs(self) -> dict:
+        """kwargs for ``ft_distributed_fft`` / ``ops.ft_fft(mesh=...)``."""
+        return dict(threshold=self.threshold,
+                    groups=self.mesh_groups,
+                    group_size=self.group_size,
+                    recompute_uncorrectable=self.recompute_uncorrectable)
 
 
 @jax.tree_util.register_dataclass

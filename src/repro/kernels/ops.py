@@ -190,11 +190,6 @@ class FTFFTResult:
     corrected: jax.Array         # scalar — number of corrections applied
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("transactions", "bs", "per_signal", "encoding",
-                     "threshold", "interpret", "correct"),
-)
 def ft_fft(
     x: jax.Array,
     *,
@@ -206,18 +201,66 @@ def ft_fft(
     correct: bool = True,
     interpret: bool | None = None,
     inject: jax.Array | None = None,
-) -> FTFFTResult:
+    mesh=None,
+    axis: str = "fft",
+    groups: int | None = None,
+    group_size: int | None = None,
+    natural_order: bool = True,
+    recompute_uncorrectable: bool = False,
+):
     """Fault-tolerant forward FFT with online detection and correction.
 
     ``per_signal=False`` is the threadblock/multi-transaction scheme of the
     paper (detection via group checksums, location via the e3 encoding);
     ``per_signal=True`` additionally computes thread-level per-signal
     checksums (more compute, finer localization).
+
+    Like :func:`fft`, passing ``mesh`` (with an ``axis`` mesh axis) — or an
+    ``x`` already committed to such a mesh — dispatches to the sharded
+    grouped two-side ABFT (``core.fft.distributed.ft_distributed_fft``) and
+    returns its :class:`~repro.core.fft.distributed.DistFFTResult` instead:
+    ``groups``/``group_size`` pick the checksum group count (the mesh-level
+    multi-transaction knob; auto = one group per data shard), and
+    ``inject`` follows the distributed 7-field layout. On the local path
+    those knobs are no-ops and the fused-kernel ``transactions`` grouping
+    applies, with the kernel's 6-field ``inject`` layout.
     """
-    interpret = _auto_interpret(interpret)
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
+    m = _dispatch_mesh(x, mesh, axis)
+    if m is not None:
+        from repro.core.fft.distributed import ft_distributed_fft
+        return ft_distributed_fft(
+            x, m, axis=axis, threshold=threshold, correct=correct,
+            natural_order=natural_order, inject=inject, groups=groups,
+            group_size=group_size,
+            recompute_uncorrectable=recompute_uncorrectable)
+    return _ft_fft_local(
+        x, transactions=transactions, bs=bs, per_signal=per_signal,
+        encoding=encoding, threshold=threshold, correct=correct,
+        interpret=interpret, inject=inject)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("transactions", "bs", "per_signal", "encoding",
+                     "threshold", "interpret", "correct"),
+)
+def _ft_fft_local(
+    x: jax.Array,
+    *,
+    transactions: int = 4,
+    bs: int | None = None,
+    per_signal: bool = False,
+    encoding: str = "wang",
+    threshold: float = 1e-4,
+    correct: bool = True,
+    interpret: bool | None = None,
+    inject: jax.Array | None = None,
+) -> FTFFTResult:
+    """The single-device fused-kernel pipeline behind :func:`ft_fft`."""
+    interpret = _auto_interpret(interpret)
     b, n = x.shape
     xr, xi = _split(x)
     plan = make_plan(n, batch=b, itemsize=xr.dtype.itemsize)

@@ -52,14 +52,21 @@ def decode(model: Model, params, prompts: jax.Array, gen: int,
 def serve_fft(x, *, shards: int | None = None, data: int = 1,
               ft: bool = False, threshold: float = 1e-4,
               op: str = "fft", kernel=None, mode: str = "same",
-              natural_order: bool | None = None):
+              natural_order: bool | None = None,
+              groups: int | None = None, group_size: int | None = None,
+              recompute_uncorrectable: bool = True):
     """Batched sharded FFT endpoint: one request = one (B, N) batch.
 
     Builds (and caches, via the jit/shard_map caches underneath) the
     ``fft``-axis mesh — 2-D ``data x fft`` when ``data > 1``, so batch rows
     shard over ``data`` while signal pencils shard over ``fft`` — and
-    returns ``(y, telemetry)``. With ``ft=True`` the sharded two-side ABFT
-    runs online and the telemetry carries the detection verdict.
+    returns ``(y, telemetry)``. With ``ft=True`` the sharded grouped
+    two-side ABFT runs online: the batch splits into ``groups`` checksum
+    groups (auto: one per data shard), each with its own detect/locate/
+    correct verdict, so one SEU per *group* is tolerated per request; a
+    multi-fault group is recomputed in place when
+    ``recompute_uncorrectable`` (the FTPolicy default). The telemetry
+    carries the per-group verdict counts.
 
     Spectral requests stay in the transposed digit order end-to-end (two
     all-to-alls, zero all-gathers — see core.fft.spectral):
@@ -121,12 +128,31 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
         return y, {"shards": 1, "ft": False}
     xs = shard_signals(x, mesh)
     if ft:
-        res = ft_distributed_fft(xs, mesh, threshold=threshold,
-                                 natural_order=natural_order is not False)
+        from repro.parallel.fft_sharding import abft_group_layout
+
+        g, gsz = abft_group_layout(mesh, x.shape[0], groups=groups,
+                                   group_size=group_size)
+        res = ft_distributed_fft(
+            xs, mesh, threshold=threshold, groups=g,
+            natural_order=natural_order is not False,
+            recompute_uncorrectable=recompute_uncorrectable)
+        flagged = np.asarray(res.flagged)
+        # the decoded location is only meaningful for correctable (single
+        # data-fault) groups — checksum-row and multi-fault verdicts clip
+        # it to an arbitrary healthy signal, which must not be reported
+        correctable = np.asarray(res.correctable)
+        locs = np.asarray(res.location)
         return res.y, {
-            "shards": int(mesh.shape["fft"]), "ft": True,
-            "score": float(res.score), "flagged": bool(res.flagged),
-            "location": int(res.location), "corrected": int(res.corrected),
+            "shards": int(mesh.shape["fft"]),
+            "data": int(mesh.shape.get("data", 1)), "ft": True,
+            "groups": g, "group_size": gsz,
+            "score": float(jnp.max(res.group_score)),
+            "flagged": int(flagged.sum()),
+            "locations": [int(l) for l, c in zip(locs, correctable) if c],
+            "corrected": int(res.corrected),
+            "uncorrectable": int(np.asarray(res.uncorrectable).sum()),
+            "checksum_faults": int(np.asarray(res.checksum_fault).sum()),
+            "recomputed": int(res.recomputed),
             "shard_delta_max": float(jnp.max(res.shard_delta)),
         }
     y = distributed_fft(xs, mesh, natural_order=natural_order is not False)
@@ -149,7 +175,7 @@ def _main_fft(args):
              ).astype(np.complex64)
     call = lambda: serve_fft(
         x, shards=args.fft_shards, data=args.fft_data, ft=args.ft,
-        op=args.fft_op, kernel=kernel,
+        op=args.fft_op, kernel=kernel, groups=args.fft_groups,
         natural_order=False if args.transposed else None)
     y, info = call()  # warmup
     t0 = time.time()
@@ -193,6 +219,9 @@ def main():
                     help="spectral ops stay in transposed order end-to-end")
     ap.add_argument("--fft-kernel-n", type=int, default=63,
                     help="kernel length for convolve/correlate")
+    ap.add_argument("--fft-groups", type=int, default=None,
+                    help="ABFT checksum groups (one tolerated SEU per "
+                         "group); default: one group per data shard")
     ap.add_argument("--fft-iters", type=int, default=5)
     ap.add_argument("--transposed", action="store_true",
                     help="keep fft/spectrum output in transposed digit order")

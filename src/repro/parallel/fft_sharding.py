@@ -13,10 +13,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan)
+from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan,
+                                        resolve_abft_groups)
 
 __all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
-           "shard_signals", "data_mesh_axis"]
+           "shard_signals", "data_mesh_axis", "abft_group_layout",
+           "abft_group_spec"]
 
 
 def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
@@ -31,6 +33,35 @@ def data_mesh_axis(mesh: Mesh | None, axis: str = DATA_AXIS) -> str | None:
     if mesh is None or axis not in getattr(mesh, "axis_names", ()):
         return None
     return axis if mesh.shape[axis] > 1 else None
+
+
+def abft_group_layout(mesh: Mesh | None, batch: int, *,
+                      groups: int | None = None,
+                      group_size: int | None = None,
+                      data_axis: str = DATA_AXIS) -> tuple[int, int]:
+    """Resolve the grouped-ABFT layout for ``batch`` signals on ``mesh``.
+
+    Returns ``(G, S)`` — the checksum group count and the signals per group
+    — after validating against the mesh's data axis: on a 2-D batch x pencil
+    mesh every group must live wholly inside one data shard (``data | G``),
+    which is what lets the ft path shard the batch instead of replicating
+    it. The same resolution runs inside ``ft_distributed_fft``; callers
+    (serve, benchmarks) use this to size telemetry up front.
+    """
+    d = data_mesh_axis(mesh, data_axis)
+    dsize = mesh.shape[d] if d else 1
+    g = resolve_abft_groups(batch, groups=groups, group_size=group_size,
+                            data_shards=dsize)
+    return g, batch // g
+
+
+def abft_group_spec(mesh: Mesh | None, data_axis: str = DATA_AXIS) -> P:
+    """PartitionSpec of per-group ABFT telemetry arrays (leading dim G).
+
+    Groups shard over the data axis exactly like the batch rows they
+    checksum — each data shard owns its groups' verdicts outright.
+    """
+    return P(data_mesh_axis(mesh, data_axis))
 
 
 def infer_fft_mesh(x, axis: str = FFT_AXIS) -> Mesh | None:

@@ -154,15 +154,15 @@ x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
 ref = np.fft.fft(x)
 
 clean = ft_distributed_fft(x, mesh)
-assert not bool(clean.flagged), float(clean.score)
+assert not bool(clean.flagged.any()), np.asarray(clean.group_score)
 assert float(jnp.max(clean.shard_delta)) < 1e-4
 assert np.abs(np.asarray(clean.y) - ref).max() / np.abs(ref).max() < 4e-5
 
 # device 2 holds the fault; the verdict consumed from shard 0's copy
 inj = jnp.asarray([2, 5, 7, 3, 1, 60.0, -25.0], jnp.float32)
 res = ft_distributed_fft(x, mesh, inject=inj)
-assert bool(res.flagged)
-assert int(res.location) == 5
+assert bool(res.flagged.all()) and bool(res.correctable.all())
+assert int(res.location[0]) == 5
 assert int(res.corrected) == 1
 err = np.abs(np.asarray(res.y) - ref).max() / np.abs(ref).max()
 assert err < 1e-4, err
@@ -194,18 +194,18 @@ x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
 ref = np.fft.fft(x)
 
 clean = ft_distributed_fft(x, mesh, threshold=1e-10)
-assert clean.score.dtype == jnp.float64, clean.score.dtype
+assert clean.group_score.dtype == jnp.float64, clean.group_score.dtype
 assert clean.shard_delta.dtype == jnp.float64
-assert float(clean.score) < 1e-12, float(clean.score)
+assert float(jnp.max(clean.group_score)) < 1e-12
 assert float(jnp.max(clean.shard_delta)) < 1e-12
-assert not bool(clean.flagged)
+assert not bool(clean.flagged.any())
 assert np.abs(np.asarray(clean.y) - ref).max() / np.abs(ref).max() < 1e-11
 
 # an SEU far below float32 visibility, caught by the fp64 pipeline
 inj = jnp.asarray([1, 3, 2, 5, 1, 1e-6, -1e-6], jnp.float64)
 res = ft_distributed_fft(x, mesh, threshold=1e-10, inject=inj)
-assert bool(res.flagged), float(res.score)
-assert int(res.location) == 3
+assert bool(res.flagged.all()), np.asarray(res.group_score)
+assert int(res.location[0]) == 3
 assert int(res.corrected) == 1
 err = np.abs(np.asarray(res.y) - ref).max() / np.abs(ref).max()
 assert err < 1e-11, err

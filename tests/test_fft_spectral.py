@@ -83,22 +83,32 @@ def test_spectral_volume_model():
 
 
 def test_collective_volume_psum_tracks_itemsize():
-    """The ABFT verdict psum is 3 scalars in the input's REAL dtype: f64 for
-    complex128 — the model must scale with itemsize, not assume 4 bytes."""
+    """The ABFT verdict psum is 3 scalars per checksum group plus one shared
+    energy scalar, in the input's REAL dtype: f64 for complex128 — the model
+    must scale with both the group count and the itemsize."""
     from repro.core.fft.distributed import collective_volume
 
     n, b, d = 1 << 14, 8, 4
 
-    def psum_bytes(itemsize):
+    def psum_bytes(itemsize, groups=1):
         # transposed order isolates the psum: same a2a rows, no gather
         ft = collective_volume(n, b, d, ft=True, natural_order=False,
-                               itemsize=itemsize)
-        plain = collective_volume(n, b + 2, d, natural_order=False,
+                               itemsize=itemsize, groups=groups)
+        plain = collective_volume(n, b + 2 * groups, d, natural_order=False,
                                   itemsize=itemsize)
         return ft["hlo_bytes"] - plain["hlo_bytes"]
 
-    assert psum_bytes(8) == pytest.approx(2.0 * 3 * 4)
-    assert psum_bytes(16) == pytest.approx(2.0 * 3 * 8)  # pre-fix: 12 B
+    assert psum_bytes(8) == pytest.approx(2.0 * 4 * 4)
+    assert psum_bytes(16) == pytest.approx(2.0 * 4 * 8)  # pre-fix: f32-sized
+    assert psum_bytes(8, groups=4) == pytest.approx(2.0 * 13 * 4)
+    # grouped + data-sharded: each device psums only its own groups' stats
+    half = collective_volume(n, b, d, ft=True, natural_order=False,
+                             groups=4, data_shards=2)
+    full = collective_volume(n, b, d, ft=True, natural_order=False, groups=4)
+    assert half["psum_wire"] == pytest.approx(
+        2.0 * 7 * 4 * (d - 1) / d)
+    assert half["all_to_all_wire"] == pytest.approx(
+        full["all_to_all_wire"] / 2)
 
 
 # ---------------------------------------------------------------------------
