@@ -18,7 +18,12 @@ ft pipeline is additionally verified to shard the batch: model==HLO with
 ``data_shards`` and ZERO all-gathers in transposed order. The
 transposed-order spectral pipeline (fft_convolve / round-trip ifft(fft)) is
 verified to lower to exactly TWO all-to-alls and ZERO all-gathers, with
-bytes matching ``spectral_volume``.
+bytes matching ``spectral_volume``. ``run_multidim`` extends the same
+contract to the 2-D transforms (core.fft.multidim): slab == one all-to-all
+with free natural order (plus the grouped-ABFT checksum grids and psum,
+fp32 and fp64), pencil == two all-to-alls (zero gathers transposed, the
+modeled digit-restore gathers natural), and the fused 2-D convolution ==
+two all-to-alls — all hard-asserted against ``collective_volume_nd``.
 
 Standalone runs force a multi-device host platform:
 
@@ -162,6 +167,106 @@ def run(smoke: bool = True):
     return rows
 
 
+def run_multidim(smoke: bool = True):
+    """Multi-dimensional (fft2) collective-volume model == HLO, both
+    decompositions (core.fft.multidim):
+
+    * slab — ONE all-to-all, zero all-gathers even in natural order (the
+      sharding lands on a true array axis), grouped-ABFT cells in fp32 AND
+      fp64 (checksum grids ride the transpose + the 3G+1-scalar psum);
+    * pencil — TWO all-to-alls on a 2-D ``data x fft`` mesh (one per mesh
+      axis) with zero all-gathers in transposed order; natural order adds
+      the modeled digit-restore gathers (``full/data + full`` bytes);
+    * the fused 2-D convolution round trip — exactly two all-to-alls and
+      zero all-gathers, kernel spectra riding the forward transpose.
+    """
+    ndev = min(4, len(jax.devices()))
+    shards = 1 << (ndev.bit_length() - 1)
+    if shards < 2:
+        print("# fft_multidim: single device visible — skipping")
+        return []
+    from repro.core.fft import multidim as md
+
+    mesh = jax.make_mesh((shards,), ("fft",))
+    rng = np.random.default_rng(2)
+    rows = []
+    for rr, cc, b in [(128, 256, 8)] if smoke else [(128, 256, 8),
+                                                    (512, 1024, 8)]:
+        x = jnp.asarray((rng.standard_normal((b, rr, cc)) +
+                         1j * rng.standard_normal((b, rr, cc))
+                         ).astype(np.complex64))
+        x128 = x.astype(jnp.complex128)
+        g = 4
+        cells = [
+            ("slab", _measured_collectives(
+                md._slab_fftn_fn(mesh, "fft", 2, False, None), x),
+             md.collective_volume_nd((rr, cc), b, shards)),
+            ("slab_ft", _measured_collectives(
+                md._ft_slab_fft2_fn(mesh, "fft", 1e-4, True, g, None), x,
+                jnp.zeros((1, 7), jnp.float32)),
+             md.collective_volume_nd((rr, cc), b, shards, ft=True, groups=g)),
+            ("slab_ft_c128", _measured_collectives(
+                md._ft_slab_fft2_fn(mesh, "fft", 1e-4, True, g, None), x128,
+                jnp.zeros((1, 7), jnp.float64)),
+             md.collective_volume_nd((rr, cc), b, shards, ft=True, groups=g,
+                                     itemsize=16)),
+        ]
+        # slab (incl. ft) never all-gathers: natural order is free
+        for tag, m, mdl in cells:
+            assert m["count"]["all-to-all"] == mdl["all_to_all_count"], (
+                tag, m["count"])
+            assert m["count"]["all-gather"] == 0, (tag, m["count"])
+        # fused 2-D convolution: kernel rides the forward transpose, the
+        # product comes back through the mirrored inverse — 2 a2a total
+        vk = jnp.asarray((rng.standard_normal((1, rr, cc)) +
+                          1j * rng.standard_normal((1, rr, cc))
+                          ).astype(np.complex64))
+        meas_cv = _measured_collectives(
+            md._conv2_pair_fn(mesh, "fft", None), x, vk)
+        fwd = md.collective_volume_nd((rr, cc), b + 1, shards)
+        inv = md.collective_volume_nd((rr, cc), b, shards)
+        model_cv = {
+            "all_to_all_count": 2, "all_gather_count": 0,
+            "total_wire": fwd["total_wire"] + inv["total_wire"],
+            "hlo_bytes": fwd["hlo_bytes"] + inv["hlo_bytes"]}
+        assert meas_cv["count"]["all-to-all"] == 2, meas_cv["count"]
+        assert meas_cv["count"]["all-gather"] == 0, meas_cv["count"]
+        cells.append(("conv2", meas_cv, model_cv))
+        if len(jax.devices()) >= 4:
+            mesh2 = jax.make_mesh((2, 2), ("data", "fft"))
+            for nat in (False, True):
+                meas_p = _measured_collectives(
+                    md._pencil_fftn_fn(mesh2, "fft", 2, False, nat, "data"),
+                    x)
+                mdl_p = md.collective_volume_nd(
+                    (rr, cc), b, 2, decomp="pencil", data_shards=2,
+                    natural_order=nat)
+                assert meas_p["count"]["all-to-all"] == \
+                    mdl_p["all_to_all_count"], (nat, meas_p["count"])
+                assert meas_p["count"]["all-gather"] == \
+                    mdl_p["all_gather_count"], (nat, meas_p["count"])
+                cells.append((f"pencil_{'nat' if nat else 'transposed'}",
+                              meas_p, mdl_p))
+            # grouped ABFT on the 2-D mesh: batch SHARDS over data, no
+            # batch all-gather, verdict psum confined to the fft axis
+            meas_ft2 = _measured_collectives(
+                md._ft_slab_fft2_fn(mesh2, "fft", 1e-4, True, g, "data"), x,
+                jnp.zeros((1, 7), jnp.float32))
+            assert meas_ft2["count"]["all-gather"] == 0, meas_ft2["count"]
+            cells.append(("slab_ft_2d", meas_ft2, md.collective_volume_nd(
+                (rr, cc), b, 2, ft=True, groups=g, data_shards=2)))
+        for tag, m, mdl in cells:
+            got = m.get("total_bytes", 0.0)
+            want = mdl["hlo_bytes"]
+            agree = got / want if want else float("nan")
+            assert want and abs(agree - 1.0) < 1e-3, (tag, got, want)
+            emit(f"fft2_{rr}x{cc}_b{b}_wire_{tag}", got,
+                 f"model={want:.0f}B;hlo/model={agree:.3f};"
+                 f"wire={mdl['total_wire']:.0f}B")
+        rows.append((rr, cc, b, cells))
+    return rows
+
+
 def run_mesh2d(smoke: bool = True):
     """Grouped ABFT on a 2-D ``data x fft`` mesh: the batch SHARDS over the
     data axis (each data shard owns G/data whole checksum groups), the
@@ -202,3 +307,4 @@ if __name__ == "__main__":
     print("name,us_per_call,derived")
     run(smoke=True)
     run_mesh2d(smoke=True)
+    run_multidim(smoke=True)

@@ -27,3 +27,12 @@ __all__ += ["DistPlan", "DistFFTResult", "make_dist_plan", "distributed_fft",
 from .spectral import fft_convolve, correlate, power_spectrum  # noqa: E402
 
 __all__ += ["fft_convolve", "correlate", "power_spectrum"]
+
+from .multidim import (choose_decomp, collective_volume_nd,  # noqa: E402
+                       distributed_fft2, distributed_ifft2,
+                       distributed_fftn, distributed_ifftn,
+                       ft_distributed_fft2, fft_convolve2)
+
+__all__ += ["choose_decomp", "collective_volume_nd", "distributed_fft2",
+            "distributed_ifft2", "distributed_fftn", "distributed_ifftn",
+            "ft_distributed_fft2", "fft_convolve2"]

@@ -486,6 +486,93 @@ def resolve_abft_groups(batch: int, *, groups: int | None = None,
     return groups
 
 
+def _grouped_verdict(ylg, d2, d3, cs2_out, *, axis, threshold, s, n, md, bl,
+                     gl, correct):
+    """The shared per-group two-side decode, from checksum divergences to
+    verdicts — used by BOTH the 1-D pencil ft pipeline here and the 2-D
+    slab ft pipeline (``multidim._ft_slab_fft2_fn``), so the fault
+    taxonomy (thresholds, ``ID_VAR_TOL``, cs2/cs3 classification) cannot
+    silently diverge between them.
+
+    ``ylg`` is the grouped local output block ``(gl, s, ...)``; ``d2``/
+    ``d3`` are the transported-minus-computed checksum divergences
+    ``(gl, ...)`` (== -eps_y and -id*eps_y for a single fault); ``n`` is
+    the per-signal element count (N for 1-D rows, R*C for 2-D grids). The
+    verdict is ONE psum of 3 scalars per locally-owned group + 1 shared
+    energy scalar, confined to ``axis``. Returns ``(ylg, stats)`` with the
+    located signal repaired in place when ``correct``.
+    """
+    num = jnp.sum((d3 * jnp.conj(d2)).real, axis=(1, 2))
+    den = jnp.sum(jnp.abs(d2) ** 2, axis=(1, 2))
+    d3sq = jnp.sum(jnp.abs(d3) ** 2, axis=(1, 2))
+    energy = jnp.sum(jnp.abs(cs2_out) ** 2)
+    payload = jnp.concatenate(
+        [jnp.stack([num, den, d3sq], axis=1).ravel(), energy[None]])
+    payload = jax.lax.psum(payload, axis)        # 3*gl + 1 scalars
+    pg = payload[:-1].reshape((gl, 3))
+    num, den, d3sq = pg[:, 0], pg[:, 1], pg[:, 2]
+    scale = jnp.sqrt(payload[-1] / (gl * n)) + EPS
+    score2 = jnp.sqrt(den / n) / scale
+    score3 = jnp.sqrt(d3sq / n) / (s * scale)
+    score = jnp.maximum(score2, score3)
+    # two-side location decode: lam estimates the within-group id; id_var
+    # is the spread of the per-element id estimates — noise-floor for a
+    # single fault (d3 == id * d2 identically), O(1) when two faults with
+    # distinct ids share a group (even magnitude-symmetric pairs whose
+    # mean id lands on an integer)
+    lam = num / (den + EPS)
+    id_var = jnp.maximum(d3sq / (den + EPS) - lam * lam, 0.0)
+    rid = jnp.round(lam).astype(jnp.int32)
+    flagged2 = score2 > threshold
+    # lam ~ 0 with no spread: the transported cs2 row itself was hit
+    # (d3 untouched) — the data is clean, nothing to correct
+    cs2_fault = flagged2 & (lam < 0.5) & (id_var < ID_VAR_TOL)
+    correctable = (flagged2 & ~cs2_fault & (rid >= 1) & (rid <= s)
+                   & (id_var < ID_VAR_TOL))
+    # d3 diverged while d2 is quiet: the cs3 row was hit
+    cs3_fault = ~flagged2 & (score3 > threshold)
+    checksum_fault = cs2_fault | cs3_fault
+    flagged = flagged2 | cs3_fault
+    loc_local = jnp.clip(rid - 1, 0, s - 1)
+    location = md * bl + jnp.arange(gl) * s + loc_local
+    if correct:
+        # d2 is the local slice of -eps_y: elementwise repair of the
+        # located signal works no matter which shard holds the fault
+        upd = jnp.where(correctable[:, None, None], d2,
+                        jnp.zeros_like(d2))
+        ylg = ylg.at[jnp.arange(gl), loc_local].add(upd)
+    fl = lambda v: v.astype(score.dtype)
+    stats = jnp.stack(
+        [score, fl(flagged), fl(location), fl(correctable),
+         fl(checksum_fault)], axis=1)            # (gl, 5)
+    return ylg, stats
+
+
+def _splice_recomputed(x, res, groups, recompute_fn, caller: str):
+    """Shared host-side policy fallback for multi-fault groups: recompute
+    the affected group's rows with the plain (unprotected, uninjected)
+    pipeline via ``recompute_fn`` and splice them in — SEUs are transient,
+    so the recompute is clean. Forces a device sync, hence opt-in."""
+    if isinstance(res.flagged, jax.core.Tracer):
+        raise ValueError(
+            "recompute_uncorrectable is a host-side fallback (it reads the "
+            "verdict to decide which group rows to recompute) and cannot "
+            f"run under jax.jit — call {caller} eagerly, or pass "
+            "recompute_uncorrectable=False inside jit and apply the "
+            "recompute on the eager result")
+    bad = np.asarray(res.uncorrectable)
+    if not bad.any():
+        return res
+    s = x.shape[0] // groups
+    y = res.y
+    for gi in np.flatnonzero(bad):
+        rows = slice(int(gi) * s, (int(gi) + 1) * s)
+        yg = recompute_fn(x[rows])
+        y = y.at[rows].set(yg.astype(y.dtype))
+    return dataclasses.replace(
+        res, y=y, recomputed=jnp.int32(int(bad.sum())))
+
+
 @functools.lru_cache(maxsize=None)
 def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
                     natural_order: bool = True, groups: int = 1,
@@ -586,50 +673,10 @@ def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
             # the verdict: 3 scalars per locally-owned group + ONE shared
             # energy scalar, psum'd over the fft axis only — the data axis
             # never participates (each data shard owns its groups outright)
-            num = jnp.sum((d3 * jnp.conj(d2)).real, axis=(1, 2))
-            den = jnp.sum(jnp.abs(d2) ** 2, axis=(1, 2))
-            d3sq = jnp.sum(jnp.abs(d3) ** 2, axis=(1, 2))
-            energy = jnp.sum(jnp.abs(cs2_out) ** 2)
-            payload = jnp.concatenate(
-                [jnp.stack([num, den, d3sq], axis=1).ravel(), energy[None]])
-            payload = jax.lax.psum(payload, axis)        # 3*gl + 1 scalars
-            pg = payload[:-1].reshape((gl, 3))
-            num, den, d3sq = pg[:, 0], pg[:, 1], pg[:, 2]
-            scale = jnp.sqrt(payload[-1] / (gl * n)) + EPS
-            score2 = jnp.sqrt(den / n) / scale
-            score3 = jnp.sqrt(d3sq / n) / (s * scale)
-            score = jnp.maximum(score2, score3)
-            # two-side location decode: lam estimates the within-group id;
-            # id_var is the spread of the per-element id estimates — noise-
-            # floor for a single fault (d3 == id * d2 identically), O(1)
-            # when two faults with distinct ids share a group (even
-            # magnitude-symmetric pairs whose mean id lands on an integer)
-            lam = num / (den + EPS)
-            id_var = jnp.maximum(d3sq / (den + EPS) - lam * lam, 0.0)
-            rid = jnp.round(lam).astype(jnp.int32)
-            flagged2 = score2 > threshold
-            # lam ~ 0 with no spread: the transported cs2 row itself was hit
-            # (d3 untouched) — the data is clean, nothing to correct
-            cs2_fault = flagged2 & (lam < 0.5) & (id_var < ID_VAR_TOL)
-            correctable = (flagged2 & ~cs2_fault & (rid >= 1) & (rid <= s)
-                           & (id_var < ID_VAR_TOL))
-            # d3 diverged while d2 is quiet: the cs3 row was hit
-            cs3_fault = ~flagged2 & (score3 > threshold)
-            checksum_fault = cs2_fault | cs3_fault
-            flagged = flagged2 | cs3_fault
-            loc_local = jnp.clip(rid - 1, 0, s - 1)
-            location = md * bl + jnp.arange(gl) * s + loc_local
-            if correct:
-                # d2 is the local slice of -eps_y: elementwise repair of the
-                # located signal works no matter which shard holds the fault
-                upd = jnp.where(correctable[:, None, None], d2,
-                                jnp.zeros_like(d2))
-                ylg = ylg.at[jnp.arange(gl), loc_local].add(upd)
+            ylg, stats = _grouped_verdict(
+                ylg, d2, d3, cs2_out, axis=axis, threshold=threshold, s=s,
+                n=n, md=md, bl=bl, gl=gl, correct=correct)
             yl = ylg.reshape((bl,) + yl.shape[1:])
-            fl = lambda v: v.astype(score.dtype)
-            stats = jnp.stack(
-                [score, fl(flagged), fl(location), fl(correctable),
-                 fl(checksum_fault)], axis=1)            # (gl, 5)
             return yl, delta[None, None], stats[None]
 
         yl, deltas, stats = shard_map(
@@ -656,29 +703,14 @@ def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
 
 
 def _recompute_uncorrectable(x, res, mesh, axis, groups, natural_order):
-    """Policy fallback for multi-fault groups: recompute the affected group
-    rows with the plain (unprotected, uninjected) pipeline and splice them
-    in — SEUs are transient, so the recompute is clean. Host-side: forces a
-    device sync, which is why it is opt-in."""
-    if isinstance(res.flagged, jax.core.Tracer):
-        raise ValueError(
-            "recompute_uncorrectable is a host-side fallback (it reads the "
-            "verdict to decide which group rows to recompute) and cannot "
-            "run under jax.jit — call ft_distributed_fft eagerly, or pass "
-            "recompute_uncorrectable=False inside jit and apply the "
-            "recompute on the eager result")
-    bad = np.asarray(res.uncorrectable)
-    if not bad.any():
-        return res
-    s = x.shape[0] // groups
-    y = res.y
-    for gi in np.flatnonzero(bad):
-        rows = slice(int(gi) * s, (int(gi) + 1) * s)
-        yg = distributed_fft(x[rows], mesh, axis=axis,
-                             natural_order=natural_order, data_axis=None)
-        y = y.at[rows].set(yg.astype(y.dtype))
-    return dataclasses.replace(
-        res, y=y, recomputed=jnp.int32(int(bad.sum())))
+    """Multi-fault-group policy fallback (see :func:`_splice_recomputed`),
+    recomputing with the plain 1-D pipeline."""
+    return _splice_recomputed(
+        x, res, groups,
+        lambda rows: distributed_fft(rows, mesh, axis=axis,
+                                     natural_order=natural_order,
+                                     data_axis=None),
+        "ft_distributed_fft")
 
 
 def ft_distributed_fft(

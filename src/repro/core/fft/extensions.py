@@ -4,7 +4,8 @@
 These compose the validated building blocks (no new numerics):
   rfft:  real -> half-spectrum via one C2C FFT of half length (the classic
          packing trick: x_even + i*x_odd),
-  fft2:  row FFT -> column FFT (the kernel-level cube applied in 2-D),
+  fft2:  thin wrapper over the distributed multidim subsystem
+         (``core.fft.multidim`` — slab/pencil on a mesh, local otherwise),
   ft_ifft: ifft(x) = conj(fft(conj(x))) / N — runs the *forward* protected
          kernel, so the two-sided ABFT covers the inverse transform too.
 """
@@ -70,19 +71,35 @@ def irfft(y: jax.Array, n: int | None = None) -> jax.Array:
     return jnp.real(_ifft(full))[..., :n]
 
 
-def fft2(x: jax.Array) -> jax.Array:
-    """2-D FFT over the last two axes (row pass then column pass)."""
-    y = _fft(x)                      # rows
-    y = jnp.swapaxes(y, -1, -2)
-    y = _fft(y)                      # columns
-    return jnp.swapaxes(y, -1, -2)
+def fft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
+         axis: str = "fft", natural_order: bool = True,
+         decomp: str = "auto") -> jax.Array:
+    """2-D FFT over the last two axes — a thin wrapper over the distributed
+    multidim subsystem (``core.fft.multidim``).
+
+    ``mesh`` (or an ``x`` already committed to an fft-axis mesh) dispatches
+    to the slab/pencil decomposition; without one this is the local
+    transform (odd / non-power-of-two axes run the direct DFT, and
+    ``interpret`` routes power-of-two axes through the Pallas kernel).
+    The old signature rejected these kwargs outright, so the 2-D
+    transform could never reach the distributed or kernel paths.
+    """
+    from repro.kernels.ops import fft2 as _ops_fft2
+
+    return _ops_fft2(x, mesh=mesh, axis=axis, natural_order=natural_order,
+                     decomp=decomp, interpret=interpret)
 
 
-def ifft2(x: jax.Array) -> jax.Array:
-    y = _ifft(x)
-    y = jnp.swapaxes(y, -1, -2)
-    y = _ifft(y)
-    return jnp.swapaxes(y, -1, -2)
+def ifft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
+          axis: str = "fft", natural_order: bool = True,
+          decomp: str = "auto") -> jax.Array:
+    """Inverse of :func:`fft2` (normalized by 1/(R*C)); same mesh /
+    interpret threading, see :func:`repro.core.fft.multidim.distributed_ifft2`.
+    """
+    from repro.kernels.ops import ifft2 as _ops_ifft2
+
+    return _ops_ifft2(x, mesh=mesh, axis=axis, natural_order=natural_order,
+                      decomp=decomp, interpret=interpret)
 
 
 def ft_ifft(x: jax.Array, **ft_kwargs):

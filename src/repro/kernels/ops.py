@@ -27,7 +27,7 @@ from repro.core.fft.stockham import block_fft_stages
 from .stockham import block_fft_pallas
 from .stockham_abft import abft_fft_pallas
 
-__all__ = ["fft", "ifft", "ft_fft", "FTFFTResult"]
+__all__ = ["fft", "ifft", "fft2", "ifft2", "ft_fft", "FTFFTResult"]
 
 
 def _auto_interpret(interpret):
@@ -170,6 +170,43 @@ def ifft(x, *, interpret=None, mesh=None, axis="fft", natural_order=True):
         from repro.core.fft.distributed import distributed_ifft
         return distributed_ifft(x, m, axis=axis, natural_order=natural_order)
     return _fft_impl(x, inverse=True, interpret=interpret)
+
+
+def fft2(x, *, interpret=None, mesh=None, axis="fft", natural_order=True,
+         decomp="auto"):
+    """2-D FFT over the last two axes (complex in/out).
+
+    Passing ``mesh`` (with an ``axis`` mesh axis) — or an ``x`` already
+    committed to such a mesh — dispatches to the distributed multidim
+    subsystem (``core.fft.multidim``): ``decomp`` picks the slab or pencil
+    layout (``"auto"`` = the :func:`~repro.core.fft.multidim.choose_decomp`
+    communication-model heuristic). ``natural_order=False`` keeps a pencil
+    result in the per-axis transposed digit order (no digit restore; the
+    flag is a no-op for slab, whose natural order is free). On the local
+    path odd / non-power-of-two axes are supported, and ``interpret``
+    routes power-of-two axes through the Pallas block kernel.
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    from repro.core.fft.multidim import distributed_fft2
+    return distributed_fft2(x, _dispatch_mesh(x, mesh, axis), axis=axis,
+                            natural_order=natural_order, decomp=decomp,
+                            interpret=interpret)
+
+
+def ifft2(x, *, interpret=None, mesh=None, axis="fft", natural_order=True,
+          decomp="auto"):
+    """Inverse 2-D transform (1/(R*C) normalized); ``natural_order=False``
+    on the mesh pencil path consumes the ``fft2(..., natural_order=False)``
+    transposed-digit output with no redistribution."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    from repro.core.fft.multidim import distributed_ifft2
+    return distributed_ifft2(x, _dispatch_mesh(x, mesh, axis), axis=axis,
+                             natural_order=natural_order, decomp=decomp,
+                             interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

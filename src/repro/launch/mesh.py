@@ -33,7 +33,11 @@ def make_fft_mesh(shards: int | None = None, data: int = 1):
     core/fft/distributed.py); a leading ``data`` axis batch-parallelizes
     independent transforms — the 2-D batch x pencil composition every entry
     point (distributed_fft/ifft, the spectral consumers, serve --mode fft)
-    auto-detects. Defaults to all visible devices on ``fft``.
+    auto-detects. The multi-dimensional transforms (core/fft/multidim.py)
+    reuse the same mesh: slab shards the grid over ``fft`` with the batch
+    on ``data``, while the pencil decomposition spends ``data`` on the
+    second transform axis, scaling ONE grid over all ``data * shards``
+    devices. Defaults to all visible devices on ``fft``.
 
     Requests that exceed the host shrink gracefully: ``data`` is clamped
     first (dropping batch parallelism costs throughput, not correctness of

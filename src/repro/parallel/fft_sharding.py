@@ -18,7 +18,7 @@ from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan,
 
 __all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
            "shard_signals", "data_mesh_axis", "abft_group_layout",
-           "abft_group_spec"]
+           "abft_group_spec", "slab_specs", "pencil_nd_specs", "shard_grid"]
 
 
 def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
@@ -87,6 +87,67 @@ def pencil_specs(axis: str = FFT_AXIS,
     With ``data_axis`` the batch dim shards over it as well (the 2-D
     batch x pencil layout)."""
     return (P(data_axis, None, axis), P(data_axis, axis, None))
+
+
+def slab_specs(ndim: int = 2, axis: str = FFT_AXIS,
+               data_axis: str | None = None) -> tuple[P, P]:
+    """(input, output) PartitionSpecs of the slab n-D transform
+    (``core.fft.multidim``, ``decomp="slab"``): the FIRST transform axis
+    block-sharded going in, the LAST coming out (the inter-axis transpose
+    moves the sharding across the grid), batch over ``data_axis``. Both
+    are true array-axis shardings — slab's natural order costs nothing.
+    """
+    if ndim < 2 or ndim > 3:
+        raise ValueError(f"ndim must be 2 or 3, got {ndim}")
+    mid = [None] * (ndim - 1)
+    return (P(data_axis, axis, *mid), P(data_axis, *mid, axis))
+
+
+def pencil_nd_specs(ndim: int = 2, axis: str = FFT_AXIS,
+                    data_axis: str | None = DATA_AXIS) -> tuple[P, P]:
+    """(input, transposed-output) PartitionSpecs of the pencil n-D cube
+    ``(B, lead.., r1, r2, c1, c2)`` (``core.fft.multidim``,
+    ``decomp="pencil"``): fast digits (r2, c2) sharded over
+    (``data_axis``, ``axis``) going in, slow digits (r1, c1) coming out in
+    transposed digit order — the data axis is spent on the second
+    transform axis, so a single grid scales over the whole 2-D mesh.
+    """
+    if ndim < 2 or ndim > 3:
+        raise ValueError(f"ndim must be 2 or 3, got {ndim}")
+    lead = [None] * (ndim - 2)
+    return (P(None, *lead, None, data_axis, None, axis),
+            P(None, *lead, data_axis, None, axis, None))
+
+
+def shard_grid(x, mesh: Mesh, ndim: int = 2, *, decomp: str = "slab",
+               axis: str = FFT_AXIS, data_axis: str | None = DATA_AXIS):
+    """Distribute a (..., grid) batch of n-D grids for the multidim
+    transform: contiguous blocks of the first (slab) or last two (pencil)
+    transform axes, batch dims over ``data_axis`` when they divide.
+
+    The slab placement matches the pipeline's resident layout exactly; the
+    pencil pipeline wants *fast digits* sharded, which is strided in the
+    flat axes, so (as with 1-D ``shard_signals``) the block placement here
+    is re-tiled once when the shard_map binds its input.
+    """
+    x = jnp.asarray(x)
+    if x.ndim < ndim:
+        raise ValueError(f"input rank {x.ndim} < ndim={ndim}")
+    nlead = x.ndim - ndim
+    daxis = data_mesh_axis(mesh, data_axis) if data_axis else None
+    if decomp == "slab":
+        bspec = daxis if (daxis and nlead >= 1
+                          and x.shape[0] % mesh.shape[daxis] == 0) else None
+        spec = ([bspec] + [None] * (nlead - 1) if nlead
+                else []) + [axis] + [None] * (ndim - 1)
+    elif decomp == "pencil":
+        gspec = [None] * (ndim - 2) + [
+            daxis if (daxis and x.shape[-2] % mesh.shape[daxis] == 0)
+            else None, axis]
+        spec = [None] * nlead + gspec
+    else:
+        raise ValueError(f"decomp must be slab|pencil, got {decomp!r}")
+    return jax.device_put(x, NamedSharding(mesh, P(*spec)))
 
 
 def shard_signals(x, mesh: Mesh, axis: str = FFT_AXIS,

@@ -89,6 +89,37 @@ def test_fft2_rectangular(rows, cols, crand, assert_spectrum_close):
     assert_spectrum_close(ifft2(fft2(jnp.asarray(x))), x)
 
 
+@pytest.mark.parametrize("rows,cols", [(11, 18), (18, 11), (27, 64), (64, 27)])
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_fft2_odd_sizes_and_roundtrip(rows, cols, dtype, crand,
+                                      assert_spectrum_close):
+    """Odd / non-power-of-two grids vs numpy in fp32 AND fp64, plus the
+    ifft2(fft2(x)) == x round trip — the local path's direct-DFT fallback
+    (the suite previously only exercised power-of-two shapes)."""
+    x = crand(rows, cols, dtype=dtype).reshape(1, rows, cols)
+    assert_spectrum_close(fft2(jnp.asarray(x)), np.fft.fft2(x))
+    assert_spectrum_close(ifft2(fft2(jnp.asarray(x))), x)
+
+
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_fft2_roundtrip_pow2(dtype, crand, assert_spectrum_close):
+    x = crand(64, 128, dtype=dtype).reshape(1, 64, 128)
+    assert_spectrum_close(ifft2(fft2(jnp.asarray(x))), x)
+    assert_spectrum_close(fft2(ifft2(jnp.asarray(x))), x)
+
+
+def test_fft2_accepts_mesh_and_interpret_kwargs(crand, assert_spectrum_close):
+    """fft2/ifft2 thread mesh=/interpret= to the multidim subsystem
+    (regression: both kwargs were previously rejected outright, so the 2-D
+    transform silently never reached the distributed or kernel paths)."""
+    x = crand(2 * 32, 64).reshape(2, 32, 64)
+    want = np.fft.fft2(x)
+    assert_spectrum_close(fft2(jnp.asarray(x), mesh=None, interpret=True),
+                          want)
+    assert_spectrum_close(
+        ifft2(fft2(jnp.asarray(x), natural_order=True), mesh=None), x)
+
+
 # ---------------------------------------------------------------------------
 # transform invariants (reference-free)
 # ---------------------------------------------------------------------------
