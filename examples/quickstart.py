@@ -15,6 +15,14 @@ x = (rng.standard_normal((32, 1024)) +
 y = ops.fft(x)
 print("fft err vs numpy:", float(np.abs(np.asarray(y) - np.fft.fft(x)).max()))
 
+# ... or the cuFFT-style way: describe the transform ONCE as an FFTSpec,
+# plan it, and reuse the cached executor for every batch (the serving path)
+from repro.kernels import FFTSpec, plan
+
+p = plan(FFTSpec(shape=x.shape))
+print("plan:", p)
+print("plan == kwarg path:", bool(jnp.array_equal(p.fft(x), y)))
+
 # 2. Fault-tolerant FFT: inject an SEU into the compute, watch the two-sided
 #    ABFT detect, locate, and correct it online — no recomputation.
 inj = jnp.asarray([1, 3, 100, 1, 50.0, -30.0], jnp.float32)  # tile 1, sig 3

@@ -24,9 +24,10 @@ __all__ += ["DistPlan", "DistFFTResult", "make_dist_plan", "distributed_fft",
             "distributed_ifft", "ft_distributed_fft", "resolve_abft_groups",
             "collective_volume", "spectral_volume", "FFT_AXIS", "DATA_AXIS"]
 
-from .spectral import fft_convolve, correlate, power_spectrum  # noqa: E402
+from .spectral import (fft_convolve, correlate, power_spectrum,  # noqa: E402
+                       conv_spec)
 
-__all__ += ["fft_convolve", "correlate", "power_spectrum"]
+__all__ += ["fft_convolve", "correlate", "power_spectrum", "conv_spec"]
 
 from .multidim import (choose_decomp, collective_volume_nd,  # noqa: E402
                        distributed_fft2, distributed_ifft2,
@@ -36,3 +37,13 @@ from .multidim import (choose_decomp, collective_volume_nd,  # noqa: E402
 __all__ += ["choose_decomp", "collective_volume_nd", "distributed_fft2",
             "distributed_ifft2", "distributed_fftn", "distributed_ifftn",
             "ft_distributed_fft2", "fft_convolve2"]
+
+# the cuFFT-style plan/execute front door (the single dispatch path every
+# public entry point funnels through)
+from .api import (FFTSpec, FTConfig, FFTPlan, plan, spec_for,  # noqa: E402
+                  plan_cache_info, plan_cache_clear,
+                  FFTKwargDeprecationWarning)
+
+__all__ += ["FFTSpec", "FTConfig", "FFTPlan", "plan", "spec_for",
+            "plan_cache_info", "plan_cache_clear",
+            "FFTKwargDeprecationWarning"]

@@ -4,10 +4,19 @@
 These compose the validated building blocks (no new numerics):
   rfft:  real -> half-spectrum via one C2C FFT of half length (the classic
          packing trick: x_even + i*x_odd),
-  fft2:  thin wrapper over the distributed multidim subsystem
-         (``core.fft.multidim`` — slab/pencil on a mesh, local otherwise),
+  fft2:  thin wrapper over a rank-2 plan (``core.fft.api`` — slab/pencil on
+         a mesh, local otherwise),
   ft_ifft: ifft(x) = conj(fft(conj(x))) / N — runs the *forward* protected
          kernel, so the two-sided ABFT covers the inverse transform too.
+
+Every function here is spec-builder sugar over ``core.fft.api``: it builds
+(or LRU-hits) the :class:`~repro.core.fft.api.FFTPlan` describing the call
+and runs the plan executor — the same single dispatch path ``kernels.ops``
+and ``launch.serve`` use. ``rfft``/``irfft`` therefore accept ``mesh=``:
+the half-length C2C transform runs the distributed pencil pipeline when the
+mesh (and a power-of-two half length >= shards^2) allows, and falls back to
+the local transform otherwise — including the odd-``n`` ``irfft`` branch,
+which is a direct DFT (odd lengths are outside the power-of-two planner).
 """
 from __future__ import annotations
 
@@ -15,21 +24,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .distributed import _AUTO, FFT_AXIS, _resolve_mesh
 from .stockham import fft as _fft, ifft as _ifft, naive_dft
 
 __all__ = ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
 
 
-def rfft(x: jax.Array) -> jax.Array:
-    """Real-input FFT over the last axis -> (..., N/2+1) half spectrum."""
+def _plan_c2c(z, mesh, axis, data_axis, *, natural_order=True):
+    """The plan for one C2C helper transform of ``z`` — distributed iff the
+    resolved mesh can actually split ``z``'s last axis, local otherwise."""
+    from . import api
+
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is not None and mesh.shape[axis] > 1 \
+            and api._feasible_1d(z.shape[-1], mesh.shape[axis]):
+        return api.plan(api.spec_for(z, mesh=mesh, axis=axis,
+                                     data_axis=data_axis,
+                                     natural_order=natural_order))
+    return None
+
+
+def rfft(x: jax.Array, *, mesh=None, axis: str = FFT_AXIS,
+         data_axis: str | None = _AUTO) -> jax.Array:
+    """Real-input FFT over the last axis -> (..., N/2+1) half spectrum.
+
+    ``mesh`` distributes the underlying half-length C2C transform over the
+    pencil pipeline (the Hermitian unpacking is elementwise and stays
+    wherever GSPMD puts it); infeasible sizes fall back to the local path.
+    """
     x = jnp.asarray(x)
     n = x.shape[-1]
     assert n % 2 == 0, "even length required"
     half = n // 2
     # pack: z[k] = x[2k] + i x[2k+1]; one half-length C2C transform
     z = x[..., 0::2] + 1j * x[..., 1::2]
-    zf = _fft(z.astype(jnp.complex64 if x.dtype != jnp.float64
-                       else jnp.complex128))
+    z = z.astype(jnp.complex64 if x.dtype != jnp.float64 else jnp.complex128)
+    p = _plan_c2c(z, mesh, axis, data_axis)
+    zf = p.fft(z) if p is not None else _fft(z)
     k = jnp.arange(half + 1)
     w = jnp.exp(-2j * np.pi * k / n).astype(zf.dtype)
     zf_ext = jnp.concatenate([zf, zf[..., :1]], axis=-1)      # Z[half] = Z[0]
@@ -39,7 +70,8 @@ def rfft(x: jax.Array) -> jax.Array:
     return even + w * odd
 
 
-def irfft(y: jax.Array, n: int | None = None) -> jax.Array:
+def irfft(y: jax.Array, n: int | None = None, *, mesh=None,
+          axis: str = FFT_AXIS, data_axis: str | None = _AUTO) -> jax.Array:
     """Inverse of rfft: (..., N/2+1) half spectrum -> (..., N) real.
 
     Even ``n`` keeps this library's documented semantics: reconstruct the
@@ -50,7 +82,8 @@ def irfft(y: jax.Array, n: int | None = None) -> jax.Array:
     wrong values). For odd ``n`` we therefore crop to the ``(n+1)//2`` bins
     an odd-length real signal has (numpy's convention) and invert exactly;
     the odd full length is outside the power-of-two Stockham planner, so
-    that branch runs the O(n^2) direct inverse DFT.
+    that branch runs the O(n^2) direct inverse DFT — locally even when a
+    ``mesh`` is passed (the documented fallback).
     """
     y = jnp.asarray(y)
     if n is None:
@@ -68,26 +101,31 @@ def irfft(y: jax.Array, n: int | None = None) -> jax.Array:
     # reconstruct the full spectrum by Hermitian symmetry, ifft, take real
     tail = jnp.conj(y[..., 1:-1][..., ::-1])
     full = jnp.concatenate([y, tail], axis=-1)
-    return jnp.real(_ifft(full))[..., :n]
+    p = _plan_c2c(full, mesh, axis, data_axis)
+    inv = p.ifft(full) if p is not None else _ifft(full)
+    return jnp.real(inv)[..., :n]
 
 
 def fft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
          axis: str = "fft", natural_order: bool = True,
          decomp: str = "auto") -> jax.Array:
-    """2-D FFT over the last two axes — a thin wrapper over the distributed
-    multidim subsystem (``core.fft.multidim``).
+    """2-D FFT over the last two axes — spec-builder sugar over a rank-2
+    plan (``core.fft.api``).
 
     ``mesh`` (or an ``x`` already committed to an fft-axis mesh) dispatches
     to the slab/pencil decomposition; without one this is the local
     transform (odd / non-power-of-two axes run the direct DFT, and
     ``interpret`` routes power-of-two axes through the Pallas kernel).
-    The old signature rejected these kwargs outright, so the 2-D
-    transform could never reach the distributed or kernel paths.
     """
-    from repro.kernels.ops import fft2 as _ops_fft2
+    from . import api
 
-    return _ops_fft2(x, mesh=mesh, axis=axis, natural_order=natural_order,
-                     decomp=decomp, interpret=interpret)
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    spec = api.spec_for(x, rank=2, mesh=mesh, axis=axis,
+                        natural_order=natural_order, decomp=decomp,
+                        interpret=interpret)
+    return api.plan(spec).fft(x)
 
 
 def ifft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
@@ -96,10 +134,15 @@ def ifft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
     """Inverse of :func:`fft2` (normalized by 1/(R*C)); same mesh /
     interpret threading, see :func:`repro.core.fft.multidim.distributed_ifft2`.
     """
-    from repro.kernels.ops import ifft2 as _ops_ifft2
+    from . import api
 
-    return _ops_ifft2(x, mesh=mesh, axis=axis, natural_order=natural_order,
-                      decomp=decomp, interpret=interpret)
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    spec = api.spec_for(x, rank=2, mesh=mesh, axis=axis,
+                        natural_order=natural_order, decomp=decomp,
+                        interpret=interpret)
+    return api.plan(spec).ifft(x)
 
 
 def ft_ifft(x: jax.Array, **ft_kwargs):

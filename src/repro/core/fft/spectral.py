@@ -35,11 +35,10 @@ from jax.experimental.shard_map import shard_map
 
 from . import factors
 from .distributed import (_AUTO, FFT_AXIS, _local_fft, _pad_batch_rows,
-                          _resolve_data_axis, _resolve_mesh, distributed_fft,
-                          make_dist_plan)
+                          _resolve_data_axis, _resolve_mesh, make_dist_plan)
 from .stockham import block_fft_stages, fft as _fft, ifft as _ifft
 
-__all__ = ["fft_convolve", "correlate", "power_spectrum"]
+__all__ = ["fft_convolve", "correlate", "power_spectrum", "conv_spec"]
 
 
 def _next_pow2(n: int) -> int:
@@ -212,8 +211,27 @@ def _conv_nfft(la: int, lv: int, mesh, axis: str) -> int:
 
 
 # ---------------------------------------------------------------------------
-# public API
+# public API — spec-builder sugar over the plan executors (core.fft.api)
 # ---------------------------------------------------------------------------
+
+
+def conv_spec(a, v, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
+              data_axis: str | None = _AUTO):
+    """The :class:`~repro.core.fft.api.FFTSpec` of the padded C2C transform
+    one convolution/correlation of ``a`` with ``v`` runs: last axis padded
+    to :func:`_conv_nfft`, batch dims from ``a``, compute dtype promoted
+    across both operands. Build it once and reuse
+    ``plan(spec).convolve/correlate`` on serve traffic.
+    """
+    from . import api
+
+    a = jnp.asarray(a)
+    v = jnp.asarray(v)
+    cdtype, _ = _result_dtypes(a, v)
+    nfft = _conv_nfft(a.shape[-1], v.shape[-1], mesh, axis)
+    return api.FFTSpec(shape=a.shape[:-1] + (nfft,),
+                       dtype=jnp.dtype(cdtype).name, rank=1, mesh=mesh,
+                       axis=axis, data_axis=data_axis)
 
 
 def fft_convolve(a, v, mesh: Mesh | None = None, *, mode: str = "full",
@@ -226,17 +244,12 @@ def fft_convolve(a, v, mesh: Mesh | None = None, *, mode: str = "full",
     per-signal batch matching ``a``'s leading dims. Real inputs give a real
     result. On a mesh the whole op lowers to exactly two all-to-alls and
     zero all-gathers (see module docstring); without one it runs the local
-    Stockham transforms.
+    Stockham transforms. Sugar over ``plan(conv_spec(a, v, ...)).convolve``.
     """
-    a = jnp.asarray(a)
-    v = jnp.asarray(v)
-    _, real = _result_dtypes(a, v)
-    la, lv = a.shape[-1], v.shape[-1]
-    nfft = _conv_nfft(la, lv, mesh, axis)
-    full = _spectral_pair(_pad_tail(a, nfft), _pad_tail(v, nfft), mesh, axis,
-                          data_axis, conj_kernel=False, out_len=la + lv - 1)
-    out = _crop(full, la, lv, mode)
-    return out.real if real else out
+    from . import api
+
+    return api.plan(conv_spec(a, v, mesh, axis=axis, data_axis=data_axis)
+                    ).convolve(a, v, mode=mode)
 
 
 def correlate(a, v, mesh: Mesh | None = None, *, mode: str = "full",
@@ -246,20 +259,12 @@ def correlate(a, v, mesh: Mesh | None = None, *, mode: str = "full",
     conj(v[k])`` — ``np.correlate`` conventions (modes full/same/valid),
     batched over leading dims. Same collective budget as
     :func:`fft_convolve`: the conjugated kernel spectrum is pointwise in
-    transposed order too.
+    transposed order too. Sugar over ``plan(conv_spec(...)).correlate``.
     """
-    a = jnp.asarray(a)
-    v = jnp.asarray(v)
-    _, real = _result_dtypes(a, v)
-    la, lv = a.shape[-1], v.shape[-1]
-    nfft = _conv_nfft(la, lv, mesh, axis)
-    circ = _spectral_pair(_pad_tail(a, nfft), _pad_tail(v, nfft), mesh, axis,
-                          data_axis, conj_kernel=True, out_len=nfft)
-    # lag m = j - (lv - 1) for output index j: negative lags wrap to the
-    # tail of the circular result — a roll on the (unsharded) signal axis
-    full = jnp.roll(circ, lv - 1, axis=-1)[..., :la + lv - 1]
-    out = _crop(full, la, lv, mode)
-    return out.real if real else out
+    from . import api
+
+    return api.plan(conv_spec(a, v, mesh, axis=axis, data_axis=data_axis)
+                    ).correlate(a, v, mode=mode)
 
 
 def power_spectrum(x, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
@@ -274,12 +279,16 @@ def power_spectrum(x, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
     notice; pass ``natural_order=True`` to pay the redistribution and get
     numpy bin order. The local path is always natural order.
     """
+    from . import api
+
     x = jnp.asarray(x)
-    n = x.shape[-1]
     mesh_r = _resolve_mesh(mesh, axis)
     on_mesh = mesh_r is not None and mesh_r.shape[axis] > 1
     if natural_order is None:
         natural_order = not on_mesh
-    y = distributed_fft(x, mesh_r, axis=axis, natural_order=natural_order,
-                        data_axis=data_axis)
-    return (jnp.abs(y) ** 2) / n
+    dt = x.dtype if jnp.issubdtype(x.dtype, jnp.complexfloating) \
+        else jnp.complex64
+    spec = api.FFTSpec(shape=tuple(x.shape), dtype=jnp.dtype(dt).name,
+                       rank=1, mesh=mesh_r, axis=axis, data_axis=data_axis,
+                       natural_order=natural_order)
+    return api.plan(spec).power_spectrum(x)

@@ -47,12 +47,22 @@ class FTPolicy:
                     encoding=self.encoding,
                     threshold=self.threshold)
 
-    def mesh_kwargs(self) -> dict:
-        """kwargs for ``ft_distributed_fft`` / ``ops.ft_fft(mesh=...)``."""
-        return dict(threshold=self.threshold,
-                    groups=self.mesh_groups,
-                    group_size=self.group_size,
-                    recompute_uncorrectable=self.recompute_uncorrectable)
+    def to_ft_config(self):
+        """The :class:`~repro.core.fft.api.FTConfig` this policy implies —
+        attach it to an ``FFTSpec`` (``FFTSpec(ft=policy.to_ft_config())``)
+        and the plan runs the grouped mesh ABFT / fused-kernel pipeline
+        with the policy's knobs. Replaces the old ``mesh_kwargs()`` pile.
+        """
+        from repro.core.fft.api import FTConfig
+
+        return FTConfig(
+            threshold=self.threshold,
+            groups=self.mesh_groups,
+            group_size=self.group_size,
+            recompute_uncorrectable=self.recompute_uncorrectable,
+            transactions=self.transactions,
+            per_signal=self.per_signal,
+            encoding=self.encoding)
 
 
 @jax.tree_util.register_dataclass

@@ -8,5 +8,7 @@ ref.py            -- pure-jnp oracles
 """
 from . import ops, ref
 from .ops import fft, ifft, ft_fft, FTFFTResult
+from repro.core.fft.api import FFTSpec, FTConfig, plan
 
-__all__ = ["ops", "ref", "fft", "ifft", "ft_fft", "FTFFTResult"]
+__all__ = ["ops", "ref", "fft", "ifft", "ft_fft", "FTFFTResult",
+           "FFTSpec", "FTConfig", "plan"]

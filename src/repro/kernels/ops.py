@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import abft
+from repro.core.fft import api as fft_api
 from repro.core.fft import factors as fft_factors
 from repro.core.fft.plan import Plan, make_plan
 from repro.core.fft.stockham import block_fft_stages
@@ -28,6 +29,32 @@ from .stockham import block_fft_pallas
 from .stockham_abft import abft_fft_pallas
 
 __all__ = ["fft", "ifft", "fft2", "ifft2", "ft_fft", "FTFFTResult"]
+
+# Sentinel marking a legacy kwarg the caller did not pass. The entry points
+# below are compat shims over the plan API (core.fft.api): explicitly
+# passing a non-default value for one of _DEPRECATED_DEFAULTS emits a
+# one-shot FFTKwargDeprecationWarning pointing at plan(FFTSpec(...)).
+_UNSET = object()
+
+_DEPRECATED_DEFAULTS = dict(mesh=None, axis="fft", natural_order=True,
+                            decomp="auto", groups=None, group_size=None,
+                            recompute_uncorrectable=False)
+
+
+def _resolve_legacy(entry: str, kw: dict) -> dict:
+    out = {}
+    deprecated = []
+    for k, v in kw.items():
+        default = _DEPRECATED_DEFAULTS[k]
+        if v is _UNSET:
+            out[k] = default
+        else:
+            out[k] = v
+            if not (v is default or v == default):
+                deprecated.append(k)
+    if deprecated:
+        fft_api.warn_deprecated_kwargs(f"kernels.ops.{entry}", deprecated)
+    return out
 
 
 def _auto_interpret(interpret):
@@ -113,100 +140,90 @@ def _fft_impl(x, *, inverse=False, interpret=None):
     return y.reshape(shape)
 
 
-def _dispatch_mesh(x, mesh, axis):
-    """The mesh to distribute over, or None for the single-device path.
-
-    Distributed when the caller passes a mesh with a non-trivial ``axis``, or
-    when ``x`` is already committed to one (see parallel.fft_sharding).
-    """
-    from repro.parallel.fft_sharding import fft_mesh_axis, infer_fft_mesh
-
-    if mesh is not None and fft_mesh_axis(mesh, axis):
-        return mesh
-    if mesh is None:
-        return infer_fft_mesh(x, axis)
-    return None
-
-
-def fft(x, *, interpret=None, mesh=None, axis="fft", natural_order=True):
+def fft(x, *, interpret=None, mesh=_UNSET, axis=_UNSET,
+        natural_order=_UNSET):
     """TurboFFT forward transform over the last axis (complex in/out).
 
-    Passing ``mesh`` (with an ``axis`` mesh axis), or an ``x`` already
-    sharded over such a mesh, dispatches to the mesh-sharded pencil
-    decomposition (core.fft.distributed) instead of the local kernels.
-    On a 2-D batch x pencil mesh the batch dims shard over the ``data``
-    axis automatically.
-
-    ``natural_order=False`` keeps the sharded result in the transposed
-    digit order (no final redistribution — see core.fft.distributed); on
-    the local path the flag is a no-op, since the local transform is
-    natural-order for free.
+    Compat shim over the plan API: the call builds (or LRU-hits) the
+    :class:`~repro.core.fft.api.FFTPlan` for the operand and runs its
+    cached executor. An ``x`` committed to an ``fft``-axis mesh plans
+    distributed (the auto-dispatch contract); passing ``mesh=`` /
+    ``natural_order=`` explicitly still works but is deprecated — build an
+    :class:`~repro.core.fft.api.FFTSpec` once and call ``plan(spec).fft``.
 
     Sharding-based auto-dispatch only works on concrete (eager) operands:
     inside an enclosing ``jax.jit`` the tracer carries no committed
-    sharding, so pass ``mesh=`` explicitly there — otherwise the call
-    lowers to the local path (still correct, but partitioned by GSPMD
-    rather than the explicit one-all-to-all pipeline).
+    sharding, so build the spec with ``mesh=`` there.
     """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
-    m = _dispatch_mesh(x, mesh, axis)
-    if m is not None:
-        from repro.core.fft.distributed import distributed_fft
-        return distributed_fft(x, m, axis=axis, natural_order=natural_order)
-    return _fft_impl(x, inverse=False, interpret=interpret)
+    kw = _resolve_legacy("fft", dict(mesh=mesh, axis=axis,
+                                     natural_order=natural_order))
+    spec = fft_api.spec_for(x, rank=1, mesh=kw["mesh"], axis=kw["axis"],
+                            natural_order=kw["natural_order"],
+                            interpret=interpret)
+    return fft_api.plan(spec).fft(x)
 
 
-def ifft(x, *, interpret=None, mesh=None, axis="fft", natural_order=True):
+def ifft(x, *, interpret=None, mesh=_UNSET, axis=_UNSET,
+         natural_order=_UNSET):
     """Inverse transform; ``natural_order=False`` on the mesh path consumes
     TRANSPOSED-order input (the ``fft(..., natural_order=False)`` output)
-    and returns natural-order time domain with no all-gather."""
+    and returns natural-order time domain with no all-gather. Compat shim
+    over ``plan(spec).ifft`` — see :func:`fft`."""
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
-    m = _dispatch_mesh(x, mesh, axis)
-    if m is not None:
-        from repro.core.fft.distributed import distributed_ifft
-        return distributed_ifft(x, m, axis=axis, natural_order=natural_order)
-    return _fft_impl(x, inverse=True, interpret=interpret)
+    kw = _resolve_legacy("ifft", dict(mesh=mesh, axis=axis,
+                                      natural_order=natural_order))
+    spec = fft_api.spec_for(x, rank=1, mesh=kw["mesh"], axis=kw["axis"],
+                            natural_order=kw["natural_order"],
+                            interpret=interpret)
+    return fft_api.plan(spec).ifft(x)
 
 
-def fft2(x, *, interpret=None, mesh=None, axis="fft", natural_order=True,
-         decomp="auto"):
+def fft2(x, *, interpret=None, mesh=_UNSET, axis=_UNSET,
+         natural_order=_UNSET, decomp=_UNSET):
     """2-D FFT over the last two axes (complex in/out).
 
-    Passing ``mesh`` (with an ``axis`` mesh axis) — or an ``x`` already
-    committed to such a mesh — dispatches to the distributed multidim
-    subsystem (``core.fft.multidim``): ``decomp`` picks the slab or pencil
+    Compat shim over a rank-2 plan: ``decomp`` picks the slab or pencil
     layout (``"auto"`` = the :func:`~repro.core.fft.multidim.choose_decomp`
-    communication-model heuristic). ``natural_order=False`` keeps a pencil
-    result in the per-axis transposed digit order (no digit restore; the
-    flag is a no-op for slab, whose natural order is free). On the local
-    path odd / non-power-of-two axes are supported, and ``interpret``
-    routes power-of-two axes through the Pallas block kernel.
+    communication-model heuristic, resolved once at plan build).
+    ``natural_order=False`` keeps a pencil result in the per-axis
+    transposed digit order (a no-op for slab, whose natural order is
+    free). On the local path odd / non-power-of-two axes are supported,
+    and ``interpret`` routes power-of-two axes through the Pallas block
+    kernel. The mesh kwargs are deprecated — see :func:`fft`.
     """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
-    from repro.core.fft.multidim import distributed_fft2
-    return distributed_fft2(x, _dispatch_mesh(x, mesh, axis), axis=axis,
-                            natural_order=natural_order, decomp=decomp,
-                            interpret=interpret)
+    kw = _resolve_legacy("fft2", dict(mesh=mesh, axis=axis,
+                                      natural_order=natural_order,
+                                      decomp=decomp))
+    spec = fft_api.spec_for(x, rank=2, mesh=kw["mesh"], axis=kw["axis"],
+                            natural_order=kw["natural_order"],
+                            decomp=kw["decomp"], interpret=interpret)
+    return fft_api.plan(spec).fft(x)
 
 
-def ifft2(x, *, interpret=None, mesh=None, axis="fft", natural_order=True,
-          decomp="auto"):
+def ifft2(x, *, interpret=None, mesh=_UNSET, axis=_UNSET,
+          natural_order=_UNSET, decomp=_UNSET):
     """Inverse 2-D transform (1/(R*C) normalized); ``natural_order=False``
     on the mesh pencil path consumes the ``fft2(..., natural_order=False)``
-    transposed-digit output with no redistribution."""
+    transposed-digit output with no redistribution. Compat shim — see
+    :func:`fft2`."""
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
-    from repro.core.fft.multidim import distributed_ifft2
-    return distributed_ifft2(x, _dispatch_mesh(x, mesh, axis), axis=axis,
-                             natural_order=natural_order, decomp=decomp,
-                             interpret=interpret)
+    kw = _resolve_legacy("ifft2", dict(mesh=mesh, axis=axis,
+                                       natural_order=natural_order,
+                                       decomp=decomp))
+    spec = fft_api.spec_for(x, rank=2, mesh=kw["mesh"], axis=kw["axis"],
+                            natural_order=kw["natural_order"],
+                            decomp=kw["decomp"], interpret=interpret)
+    return fft_api.plan(spec).ifft(x)
 
 
 # ---------------------------------------------------------------------------
@@ -238,12 +255,12 @@ def ft_fft(
     correct: bool = True,
     interpret: bool | None = None,
     inject: jax.Array | None = None,
-    mesh=None,
-    axis: str = "fft",
-    groups: int | None = None,
-    group_size: int | None = None,
-    natural_order: bool = True,
-    recompute_uncorrectable: bool = False,
+    mesh=_UNSET,
+    axis=_UNSET,
+    groups=_UNSET,
+    group_size=_UNSET,
+    natural_order=_UNSET,
+    recompute_uncorrectable=_UNSET,
 ):
     """Fault-tolerant forward FFT with online detection and correction.
 
@@ -252,11 +269,12 @@ def ft_fft(
     ``per_signal=True`` additionally computes thread-level per-signal
     checksums (more compute, finer localization).
 
-    Like :func:`fft`, passing ``mesh`` (with an ``axis`` mesh axis) — or an
-    ``x`` already committed to such a mesh — dispatches to the sharded
-    grouped two-side ABFT (``core.fft.distributed.ft_distributed_fft``) and
-    returns its :class:`~repro.core.fft.distributed.DistFFTResult` instead:
-    ``groups``/``group_size`` pick the checksum group count (the mesh-level
+    Compat shim over an ft plan (``FFTSpec(ft=FTConfig(...))``): an ``x``
+    committed to an ``fft``-axis mesh (or an explicit — deprecated —
+    ``mesh=``) runs the sharded grouped two-side ABFT
+    (``core.fft.distributed.ft_distributed_fft``) and returns its
+    :class:`~repro.core.fft.distributed.DistFFTResult`; ``groups``/
+    ``group_size`` pick the checksum group count (the mesh-level
     multi-transaction knob; auto = one group per data shard), and
     ``inject`` follows the distributed 7-field layout. On the local path
     those knobs are no-ops and the fused-kernel ``transactions`` grouping
@@ -265,18 +283,19 @@ def ft_fft(
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
-    m = _dispatch_mesh(x, mesh, axis)
-    if m is not None:
-        from repro.core.fft.distributed import ft_distributed_fft
-        return ft_distributed_fft(
-            x, m, axis=axis, threshold=threshold, correct=correct,
-            natural_order=natural_order, inject=inject, groups=groups,
-            group_size=group_size,
-            recompute_uncorrectable=recompute_uncorrectable)
-    return _ft_fft_local(
-        x, transactions=transactions, bs=bs, per_signal=per_signal,
-        encoding=encoding, threshold=threshold, correct=correct,
-        interpret=interpret, inject=inject)
+    kw = _resolve_legacy("ft_fft", dict(
+        mesh=mesh, axis=axis, groups=groups, group_size=group_size,
+        natural_order=natural_order,
+        recompute_uncorrectable=recompute_uncorrectable))
+    ft = fft_api.FTConfig(
+        threshold=threshold, correct=correct, groups=kw["groups"],
+        group_size=kw["group_size"],
+        recompute_uncorrectable=kw["recompute_uncorrectable"],
+        transactions=transactions, per_signal=per_signal, encoding=encoding)
+    spec = fft_api.spec_for(x, rank=1, mesh=kw["mesh"], axis=kw["axis"],
+                            natural_order=kw["natural_order"], ft=ft,
+                            interpret=interpret)
+    return fft_api.plan(spec).ft_fft(x, inject=inject, bs=bs)
 
 
 @functools.partial(

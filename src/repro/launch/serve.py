@@ -8,6 +8,13 @@ batched sharded-FFT endpoint backed by the distributed transform.
     PYTHONPATH=src python -m repro.launch.serve --mode fft \
         --fft-n 65536 --batch 8 --fft-shards 4 --ft
 
+    # the same worker described by ONE consolidated plan spec (the worker
+    # builds a single FFTPlan from it at startup; the --fft-* flags are
+    # sugar that provide the defaults the spec string overrides)
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --mode fft \
+        --fft-spec "n=65536,batch=8,shards=4,ft=1,groups=4"
+
     # transposed-order convolution on a 2-D batch x pencil mesh
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.serve --mode fft --fft-op convolve \
@@ -55,6 +62,145 @@ def decode(model: Model, params, prompts: jax.Array, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
+def build_fft_spec(shape, *, mesh=None, op: str = "fft",
+                   kernel_shape=None, dims: int | None = None,
+                   decomp: str = "auto", ft: bool = False,
+                   threshold: float = 1e-4, groups: int | None = None,
+                   group_size: int | None = None,
+                   recompute_uncorrectable: bool = True,
+                   natural_order: bool | None = None,
+                   dtype="complex64"):
+    """Resolve one serving request description into the
+    :class:`~repro.core.fft.api.FFTSpec` its plan is built from.
+
+    ``shape`` is the request batch shape — ``(B, N)`` for 1-D, ``(B, R,
+    C)`` for 2-D. For ``op="convolve"``/``"correlate"`` the spec describes
+    the PADDED transform the spectral pipeline actually runs (last axes
+    padded to a power of two covering the linear result), so one plan
+    serves every request of that operand geometry. ``natural_order=None``
+    resolves the per-op default: the order-agnostic periodogram stays
+    transposed on a mesh (the digit restore is pure waste for ``|X|^2``),
+    everything else is natural. The old serve flags are sugar over this
+    builder — see ``--fft-spec``.
+    """
+    from repro.core.fft import api, spectral
+
+    dims = dims if dims is not None else max(1, len(shape) - 1)
+    if dims not in (1, 2):
+        raise ValueError(f"dims must be 1 or 2, got {dims}")
+    if op not in ("fft", "convolve", "correlate", "spectrum"):
+        raise ValueError(f"op must be fft|convolve|correlate|spectrum, "
+                         f"got {op!r}")
+    if op == "correlate" and dims == 2:
+        raise ValueError("op='correlate' is 1-D only; dims=2 serves "
+                         "fft|convolve|spectrum")
+    if len(shape) != dims + 1:
+        raise ValueError(f"dims={dims} expects a (batch, ...) shape with "
+                         f"{dims} transform axes, got {tuple(shape)}")
+    sharded = mesh is not None and "fft" in mesh.axis_names \
+        and mesh.shape["fft"] > 1
+    ft_cfg = None
+    if ft and op == "fft":
+        ft_cfg = api.FTConfig(threshold=threshold, groups=groups,
+                              group_size=group_size,
+                              recompute_uncorrectable=recompute_uncorrectable)
+    if op in ("convolve", "correlate"):
+        if kernel_shape is None:
+            raise ValueError(f"op={op!r} needs a kernel")
+        if dims == 1:
+            nfft = spectral._conv_nfft(shape[-1], kernel_shape[-1], mesh,
+                                       "fft")
+            shape = tuple(shape[:-1]) + (nfft,)
+        else:
+            shards = mesh.shape["fft"] if sharded else 1
+            nr = max(spectral._next_pow2(shape[-2] + kernel_shape[-2] - 1),
+                     shards)
+            nc = max(spectral._next_pow2(shape[-1] + kernel_shape[-1] - 1),
+                     shards)
+            shape = tuple(shape[:-2]) + (nr, nc)
+            decomp = "slab" if sharded else "auto"
+        natural_order = True
+    elif natural_order is None:
+        # the per-op order default of the legacy endpoint
+        natural_order = not (sharded and op == "spectrum")
+    return api.FFTSpec(shape=tuple(int(s) for s in shape),
+                       dtype=jnp.dtype(dtype).name, rank=dims, mesh=mesh,
+                       axis="fft", decomp="auto" if dims == 1 else decomp,
+                       natural_order=bool(natural_order), ft=ft_cfg)
+
+
+def _ft_telemetry(plan, res, info):
+    """DistFFTResult -> the serve telemetry dict (grouped verdict counts)."""
+    flagged = np.asarray(res.flagged)
+    # the decoded location is only meaningful for correctable (single
+    # data-fault) groups — checksum-row and multi-fault verdicts clip it
+    # to an arbitrary healthy signal, which must not be reported
+    correctable = np.asarray(res.correctable)
+    locs = np.asarray(res.location)
+    info.update(
+        ft=True, groups=plan.groups,
+        group_size=plan.batch // plan.groups,
+        score=float(jnp.max(res.group_score)),
+        flagged=int(flagged.sum()),
+        locations=[int(l) for l, c in zip(locs, correctable) if c],
+        corrected=int(res.corrected),
+        uncorrectable=int(np.asarray(res.uncorrectable).sum()),
+        checksum_faults=int(np.asarray(res.checksum_fault).sum()),
+        recomputed=int(res.recomputed),
+        shard_delta_max=float(jnp.max(res.shard_delta)))
+    return info
+
+
+def serve_plan(plan, x, *, op: str = "fft", kernel=None, mode: str = "same"):
+    """Serve one batched request through a pre-built
+    :class:`~repro.core.fft.api.FFTPlan` — the hot path: every dispatch
+    decision (mesh, decomposition, ABFT groups, digit order) was resolved
+    when the plan was built, so this is a straight executor call plus
+    telemetry assembly. Returns ``(y, info)``.
+    """
+    x = jnp.asarray(x)
+    info = {"shards": plan.shards, "data": plan.dsize, "op": op}
+    if plan.rank == 2:
+        info["dims"] = 2
+        info["decomp"] = plan.decomp
+    transposed = (plan.sharded and not plan.spec.natural_order
+                  and (plan.rank == 1 or plan.decomp == "pencil"))
+    if op in ("convolve", "correlate"):
+        if kernel is None:
+            raise ValueError(f"op={op!r} needs a kernel")
+        fn = plan.convolve if op == "convolve" else plan.correlate
+        y = fn(x, kernel, mode=mode)
+        info.update(order="natural",
+                    collectives="2 a2a" if plan.sharded else "local")
+        return y, info
+    if op == "spectrum":
+        y = plan.power_spectrum(x)
+        info["order"] = "transposed" if transposed else "natural"
+        return y, info
+    if op != "fft":
+        raise ValueError(f"op must be fft|convolve|correlate|spectrum, "
+                         f"got {op!r}")
+    xs = plan.shard(x)
+    if plan.spec.ft is not None:
+        res = plan.ft_fft(xs)
+        if not plan.sharded:
+            # single device: the fused-kernel two-side ABFT telemetry
+            flagged = np.asarray(res.flagged)
+            g = int(np.argmax(flagged)) if flagged.any() else -1
+            info.update(
+                ft=True, score=float(jnp.max(res.group_score)),
+                flagged=bool(flagged.any()),
+                location=int(np.asarray(res.location)[g]) if g >= 0 else -1,
+                corrected=int(res.corrected))
+            return res.y, info
+        return res.y, _ft_telemetry(plan, res, info)
+    y = plan.fft(xs)
+    info.update(ft=False)
+    if plan.sharded:
+        info["order"] = "transposed" if transposed else "natural"
+    return y, info
+
+
 def serve_fft(x, *, shards: int | None = None, data: int = 1,
               ft: bool = False, threshold: float = 1e-4,
               op: str = "fft", kernel=None, mode: str = "same",
@@ -62,210 +208,92 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
               groups: int | None = None, group_size: int | None = None,
               recompute_uncorrectable: bool = True,
               dims: int = 1, decomp: str = "auto"):
-    """Batched sharded FFT endpoint: one request = one (B, N) batch.
+    """Batched sharded FFT endpoint: one request = one (B, N) batch
+    (``dims=2``: one (B, R, C) grid batch).
 
-    Builds (and caches, via the jit/shard_map caches underneath) the
-    ``fft``-axis mesh — 2-D ``data x fft`` when ``data > 1``, so batch rows
-    shard over ``data`` while signal pencils shard over ``fft`` — and
-    returns ``(y, telemetry)``. With ``ft=True`` the sharded grouped
-    two-side ABFT runs online: the batch splits into ``groups`` checksum
-    groups (auto: one per data shard), each with its own detect/locate/
-    correct verdict, so one SEU per *group* is tolerated per request; a
-    multi-fault group is recomputed in place when
-    ``recompute_uncorrectable`` (the FTPolicy default). The telemetry
-    carries the per-group verdict counts.
+    Compat sugar over the plan API: builds the ``fft``-axis mesh — 2-D
+    ``data x fft`` when ``data > 1`` — resolves the request into an
+    :class:`~repro.core.fft.api.FFTSpec` via :func:`build_fft_spec`,
+    LRU-hits the plan, and serves through :func:`serve_plan`. A production
+    worker should build the plan ONCE at startup (what ``--mode fft`` now
+    does) instead of re-describing it per request; the behavior is
+    identical either way thanks to the plan cache.
 
-    Spectral requests stay in the transposed digit order end-to-end (two
-    all-to-alls, zero all-gathers — see core.fft.spectral):
-
-    * ``op="convolve"`` / ``op="correlate"``: linear convolution /
-      cross-correlation of each signal with ``kernel`` (modes
-      full/same/valid); the time-domain result is natural order.
-    * ``op="spectrum"``: periodogram; the bins stay transposed (the order
-      every bin-agnostic consumer wants) unless ``natural_order=True``.
-    * ``op="fft"``: the plain transform; ``natural_order=False`` skips the
-      final redistribution and returns transposed-order bins.
-
-    ``dims=2`` serves (B, R, C) grid batches through the multidim
-    subsystem (core.fft.multidim): ``decomp`` picks slab / pencil / auto
-    (the collective-volume heuristic), ``ft`` runs the grouped two-side
-    ABFT on the slab row pass, ``op="convolve"`` is the fused 2-D
-    spectral pipeline (two all-to-alls, zero all-gathers), and
-    ``op="spectrum"`` the 2-D periodogram.
+    With ``ft=True`` the sharded grouped two-side ABFT runs online (one
+    tolerated SEU per checksum group per request; multi-fault groups are
+    recomputed in place when ``recompute_uncorrectable``, the FTPolicy
+    default) and the telemetry carries the per-group verdict counts.
+    Spectral requests (``op="convolve" | "correlate" | "spectrum"``) stay
+    in the transposed digit order end-to-end — two all-to-alls, zero
+    all-gathers (see core.fft.spectral / multidim).
     """
-    from repro.core.fft import spectral
-    from repro.core.fft.distributed import distributed_fft, ft_distributed_fft
+    from repro.core.fft import api
     from repro.launch.mesh import make_fft_mesh
-    from repro.parallel.fft_sharding import shard_signals
 
-    if op not in ("fft", "convolve", "correlate", "spectrum"):
-        raise ValueError(f"op must be fft|convolve|correlate|spectrum, "
-                         f"got {op!r}")
+    x = jnp.asarray(x)
     if dims not in (1, 2):
         raise ValueError(f"dims must be 1 or 2, got {dims}")
-    x = jnp.asarray(x)
-    if op == "fft" and not jnp.issubdtype(x.dtype, jnp.complexfloating):
-        x = x.astype(jnp.complex64)
-    mesh = make_fft_mesh(shards, data)
-    if dims == 2:
-        return _serve_fft2(x, mesh, ft=ft, threshold=threshold, op=op,
-                           kernel=kernel, mode=mode, decomp=decomp,
-                           natural_order=natural_order, groups=groups,
-                           group_size=group_size,
-                           recompute_uncorrectable=recompute_uncorrectable)
-
-    if op in ("convolve", "correlate"):
-        if kernel is None:
-            raise ValueError(f"op={op!r} needs a kernel")
-        fn = spectral.fft_convolve if op == "convolve" else spectral.correlate
-        y = fn(x, kernel, mesh, mode=mode)
-        sharded = mesh.shape["fft"] > 1
-        return y, {"shards": int(mesh.shape["fft"]),
-                   "data": int(mesh.shape.get("data", 1)),
-                   "op": op, "order": "natural",
-                   "collectives": "2 a2a" if sharded else "local"}
-    if op == "spectrum":
-        y = spectral.power_spectrum(x, mesh, natural_order=natural_order)
-        transposed = (natural_order is not True and mesh.shape["fft"] > 1)
-        return y, {"shards": int(mesh.shape["fft"]),
-                   "data": int(mesh.shape.get("data", 1)), "op": op,
-                   "order": "transposed" if transposed else "natural"}
-
-    if mesh.shape["fft"] == 1:
-        if ft:
-            # single device: the fused-kernel two-side ABFT path
-            from repro.kernels.ops import ft_fft
-
-            res = ft_fft(x, threshold=threshold)
-            flagged = np.asarray(res.flagged)
-            g = int(np.argmax(flagged)) if flagged.any() else -1
-            return res.y, {
-                "shards": 1, "ft": True,
-                "score": float(jnp.max(res.group_score)),
-                "flagged": bool(flagged.any()),
-                "location": int(np.asarray(res.location)[g]) if g >= 0 else -1,
-                "corrected": int(res.corrected),
-            }
-        y = distributed_fft(x, None)
-        return y, {"shards": 1, "ft": False}
-    xs = shard_signals(x, mesh)
-    if ft:
-        from repro.parallel.fft_sharding import abft_group_layout
-
-        g, gsz = abft_group_layout(mesh, x.shape[0], groups=groups,
-                                   group_size=group_size)
-        res = ft_distributed_fft(
-            xs, mesh, threshold=threshold, groups=g,
-            natural_order=natural_order is not False,
-            recompute_uncorrectable=recompute_uncorrectable)
-        flagged = np.asarray(res.flagged)
-        # the decoded location is only meaningful for correctable (single
-        # data-fault) groups — checksum-row and multi-fault verdicts clip
-        # it to an arbitrary healthy signal, which must not be reported
-        correctable = np.asarray(res.correctable)
-        locs = np.asarray(res.location)
-        return res.y, {
-            "shards": int(mesh.shape["fft"]),
-            "data": int(mesh.shape.get("data", 1)), "ft": True,
-            "groups": g, "group_size": gsz,
-            "score": float(jnp.max(res.group_score)),
-            "flagged": int(flagged.sum()),
-            "locations": [int(l) for l, c in zip(locs, correctable) if c],
-            "corrected": int(res.corrected),
-            "uncorrectable": int(np.asarray(res.uncorrectable).sum()),
-            "checksum_faults": int(np.asarray(res.checksum_fault).sum()),
-            "recomputed": int(res.recomputed),
-            "shard_delta_max": float(jnp.max(res.shard_delta)),
-        }
-    y = distributed_fft(xs, mesh, natural_order=natural_order is not False)
-    return y, {"shards": int(mesh.shape["fft"]),
-               "data": int(mesh.shape.get("data", 1)), "ft": False,
-               "order": "natural" if natural_order is not False
-               else "transposed"}
-
-
-def _serve_fft2(x, mesh, *, ft, threshold, op, kernel, mode, decomp,
-                natural_order, groups, group_size, recompute_uncorrectable):
-    """The ``dims=2`` half of :func:`serve_fft`: (B, R, C) grid batches
-    through ``core.fft.multidim`` (slab / pencil / auto)."""
-    from repro.core.fft import multidim
-    from repro.parallel.fft_sharding import shard_grid
-
-    if x.ndim != 3:
+    if dims == 2 and x.ndim != 3:
         raise ValueError(f"dims=2 expects (B, R, C) batches, got {x.shape}")
-    b, rr, cc = x.shape
-    sharded = mesh.shape["fft"] > 1
-    info = {"shards": int(mesh.shape["fft"]),
-            "data": int(mesh.shape.get("data", 1)), "op": op, "dims": 2}
-    if op == "correlate":
-        raise ValueError("op='correlate' is 1-D only; dims=2 serves "
-                         "fft|convolve|spectrum")
-    if op == "convolve":
-        if kernel is None:
-            raise ValueError("op='convolve' needs a kernel")
-        y = multidim.fft_convolve2(x, kernel, mesh if sharded else None,
-                                   mode=mode)
-        info.update(order="natural",
-                    collectives="2 a2a" if sharded else "local")
-        return y, info
-    # the effective bin order: like the 1-D endpoint, the order-agnostic
-    # periodogram defaults to the cheap transposed order on a mesh (the
-    # digit restore is pure waste for |X|^2), the plain transform to
-    # natural; an explicit natural_order always wins
-    nat = (natural_order if natural_order is not None
-           else not (sharded and op == "spectrum"))
-    if decomp == "auto" and sharded:
-        decomp = multidim.choose_decomp((rr, cc), mesh, batch=b, ft=ft,
-                                        natural_order=nat)
-    info["decomp"] = decomp if sharded else "local"
-    if op == "spectrum":
-        y = multidim.distributed_fft2(
-            x, mesh if sharded else None, decomp=decomp, natural_order=nat)
-        info["order"] = ("transposed" if (decomp == "pencil" and sharded
-                                          and not nat) else "natural")
-        return (jnp.abs(y) ** 2) / (rr * cc), info
-    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
-        x = x.astype(jnp.complex64)
-    if ft:
-        if not sharded:
-            raise ValueError("--ft with dims=2 runs the sharded grouped "
-                             "ABFT: needs an fft axis >= 2 devices")
-        if decomp == "pencil":
-            raise ValueError("grouped ABFT rides the slab inter-axis "
-                             "transpose: --ft needs --fft-decomp slab|auto")
-        from repro.parallel.fft_sharding import abft_group_layout
+    mesh = make_fft_mesh(shards, data)
+    kshape = jnp.asarray(kernel).shape if kernel is not None else None
+    dt = x.dtype if jnp.issubdtype(x.dtype, jnp.complexfloating) \
+        else jnp.complex64
+    spec = build_fft_spec(
+        x.shape, mesh=mesh, op=op, kernel_shape=kshape, dims=dims,
+        decomp=decomp, ft=ft, threshold=threshold, groups=groups,
+        group_size=group_size,
+        recompute_uncorrectable=recompute_uncorrectable,
+        natural_order=natural_order, dtype=dt)
+    return serve_plan(api.plan(spec), x, op=op, kernel=kernel, mode=mode)
 
-        g, gsz = abft_group_layout(mesh, b, groups=groups,
-                                   group_size=group_size)
-        xs = shard_grid(x, mesh, 2, decomp="slab")
-        res = multidim.ft_distributed_fft2(
-            xs, mesh, threshold=threshold, groups=g,
-            recompute_uncorrectable=recompute_uncorrectable)
-        correctable = np.asarray(res.correctable)
-        locs = np.asarray(res.location)
-        info.update(
-            ft=True, decomp="slab", groups=g, group_size=gsz,
-            score=float(jnp.max(res.group_score)),
-            flagged=int(np.asarray(res.flagged).sum()),
-            locations=[int(l) for l, c in zip(locs, correctable) if c],
-            corrected=int(res.corrected),
-            uncorrectable=int(np.asarray(res.uncorrectable).sum()),
-            checksum_faults=int(np.asarray(res.checksum_fault).sum()),
-            recomputed=int(res.recomputed),
-            shard_delta_max=float(jnp.max(res.shard_delta)))
-        return res.y, info
-    if sharded:
-        x = shard_grid(x, mesh, 2,
-                       decomp="slab" if decomp == "slab" else "pencil")
-    y = multidim.distributed_fft2(x, mesh if sharded else None, decomp=decomp,
-                                  natural_order=nat)
-    info.update(ft=False,
-                order="transposed" if (sharded and decomp == "pencil"
-                                       and not nat) else "natural")
-    return y, info
+
+_SPEC_KEYS = {
+    # --fft-spec "k=v,..." keys -> (argparse dest, parser)
+    "n": ("fft_n", int), "batch": ("batch", int),
+    "shards": ("fft_shards", int), "data": ("fft_data", int),
+    "dims": ("fft_dims", int), "rows": ("fft_rows", int),
+    "cols": ("fft_cols", int), "op": ("fft_op", str),
+    "decomp": ("fft_decomp", str), "ft": ("ft", None),
+    "groups": ("fft_groups", int), "kernel_n": ("fft_kernel_n", int),
+    "transposed": ("transposed", None), "threshold": ("fft_threshold", float),
+}
+
+
+def _parse_bool(v: str) -> bool:
+    if v.lower() in ("1", "true", "yes", "on", ""):
+        return True
+    if v.lower() in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"expected a boolean, got {v!r}")
+
+
+def apply_fft_spec_arg(args, s: str):
+    """Apply a consolidated ``--fft-spec "n=65536,batch=8,shards=4,ft=1"``
+    string onto the parsed args — one flag describing the whole worker
+    plan; the individual ``--fft-*`` flags remain as sugar and provide the
+    defaults the spec string overrides."""
+    for item in s.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        k, _, v = item.partition("=")
+        k = k.strip()
+        if k not in _SPEC_KEYS:
+            raise SystemExit(
+                f"--fft-spec: unknown key {k!r} (valid: "
+                f"{', '.join(sorted(_SPEC_KEYS))})")
+        dest, parse = _SPEC_KEYS[k]
+        setattr(args, dest, _parse_bool(v) if parse is None else parse(v))
+    return args
 
 
 def _main_fft(args):
+    from repro.core.fft import api
+    from repro.launch.mesh import make_fft_mesh
+
+    if args.fft_spec:
+        apply_fft_spec_arg(args, args.fft_spec)
     rng = np.random.default_rng(0)
     kernel = None
     if args.fft_dims == 2:
@@ -282,11 +310,18 @@ def _main_fft(args):
     else:
         x = (rng.standard_normal(shape) +
              1j * rng.standard_normal(shape)).astype(np.complex64)
-    call = lambda: serve_fft(
-        x, shards=args.fft_shards, data=args.fft_data, ft=args.ft,
-        op=args.fft_op, kernel=kernel, groups=args.fft_groups,
-        dims=args.fft_dims, decomp=args.fft_decomp,
+    # ONE plan per worker, built at startup: every request dispatches
+    # through its cached executors (the cuFFT plan-once/exec-hot contract)
+    mesh = make_fft_mesh(args.fft_shards, args.fft_data)
+    spec = build_fft_spec(
+        shape, mesh=mesh, op=args.fft_op,
+        kernel_shape=kernel.shape if kernel is not None else None,
+        dims=args.fft_dims, decomp=args.fft_decomp, ft=args.ft,
+        threshold=args.fft_threshold, groups=args.fft_groups,
         natural_order=False if args.transposed else None)
+    p = api.plan(spec)
+    print(f"# {p}")
+    call = lambda: serve_plan(p, x, op=args.fft_op, kernel=kernel)
     y, info = call()  # warmup
     t0 = time.time()
     for _ in range(args.fft_iters):
@@ -356,6 +391,14 @@ def main():
     ap.add_argument("--fft-groups", type=int, default=None,
                     help="ABFT checksum groups (one tolerated SEU per "
                          "group); default: one group per data shard")
+    ap.add_argument("--fft-threshold", type=float, default=1e-4,
+                    help="ABFT detection threshold")
+    ap.add_argument("--fft-spec", default=None,
+                    help="consolidated plan description, e.g. "
+                         "'n=65536,batch=8,shards=4,data=2,ft=1,groups=4' "
+                         "(keys: " + ", ".join(sorted(_SPEC_KEYS)) + "); "
+                         "overrides the individual --fft-* flags — the "
+                         "worker builds ONE FFTPlan from it at startup")
     ap.add_argument("--fft-iters", type=int, default=5)
     ap.add_argument("--transposed", action="store_true",
                     help="keep fft/spectrum output in transposed digit order")

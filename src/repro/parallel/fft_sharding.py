@@ -18,7 +18,8 @@ from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan,
 
 __all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
            "shard_signals", "data_mesh_axis", "abft_group_layout",
-           "abft_group_spec", "slab_specs", "pencil_nd_specs", "shard_grid"]
+           "abft_group_spec", "slab_specs", "pencil_nd_specs", "shard_grid",
+           "layout_specs"]
 
 
 def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
@@ -117,6 +118,24 @@ def pencil_nd_specs(ndim: int = 2, axis: str = FFT_AXIS,
     lead = [None] * (ndim - 2)
     return (P(None, *lead, None, data_axis, None, axis),
             P(None, *lead, data_axis, None, axis, None))
+
+
+def layout_specs(rank: int, decomp: str, *, axis: str = FFT_AXIS,
+                 data_axis: str | None = None) -> tuple[P, P]:
+    """(input, output) PartitionSpecs of one planned transform's resident
+    layouts — the single entry point ``core.fft.api.FFTPlan`` resolves its
+    specs through. Rank 1 is always the pencil digit split
+    (:func:`pencil_specs`); rank >= 2 dispatches on the resolved ``decomp``
+    (:func:`slab_specs` / :func:`pencil_nd_specs`).
+    """
+    if rank == 1:
+        return pencil_specs(axis, data_axis)
+    if decomp == "slab":
+        return slab_specs(rank, axis, data_axis)
+    if decomp == "pencil":
+        return pencil_nd_specs(rank, axis, data_axis)
+    raise ValueError(f"decomp must be slab|pencil for rank {rank}, "
+                     f"got {decomp!r}")
 
 
 def shard_grid(x, mesh: Mesh, ndim: int = 2, *, decomp: str = "slab",

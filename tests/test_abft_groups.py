@@ -269,10 +269,10 @@ def test_no_batch_allgather_on_2d_mesh_subprocess():
 def test_serve_and_ops_thread_groups():
     out = run_py("""
 import numpy as np, jax, jax.numpy as jnp
+from repro.core.fft import FFTSpec, FTConfig, plan
 from repro.launch.serve import serve_fft
 from repro.launch.mesh import make_fft_mesh
 from repro.parallel import shard_signals
-from repro.kernels import ops
 
 rng = np.random.default_rng(5)
 b, n = 8, 1 << 12
@@ -286,13 +286,15 @@ assert info["groups"] == 4 and info["group_size"] == 2, info
 assert info["flagged"] == 0 and info["recomputed"] == 0, info
 assert np.abs(np.asarray(y) - ref).max() / np.abs(ref).max() < 4e-5
 
-# ops.ft_fft auto-dispatches to the grouped sharded path on a committed
-# mesh operand and accepts the distributed 7-field inject layout
+# an ft plan threads the groups knob to the grouped sharded path and
+# accepts the distributed 7-field inject layout
 mesh = make_fft_mesh(4)
 xs = shard_signals(x, mesh)
 inj = jnp.asarray([[1, 2, 5, 2, 1, 60.0, -25.0],
                    [2, 5, 7, 3, 1, 40.0, 35.0]], jnp.float32)
-res = ops.ft_fft(xs, groups=4, inject=inj)
+p = plan(FFTSpec(shape=x.shape, mesh=mesh, ft=FTConfig(groups=4)))
+assert p.groups == 4
+res = p.ft_fft(xs, inject=inj)
 assert res.flagged.shape == (4,)
 assert list(np.asarray(res.flagged)) == [False, True, True, False]
 assert int(res.location[1]) == 2 and int(res.location[2]) == 5

@@ -111,6 +111,7 @@ def test_ops_fft_auto_dispatches_on_sharded_input():
     committed to an fft-axis mesh (and when a mesh is passed explicitly)."""
     out = run_py("""
 import numpy as np, jax, jax.numpy as jnp
+from repro.core.fft import FFTSpec, plan
 from repro.kernels import ops
 from repro.launch.mesh import make_fft_mesh
 from repro.parallel import shard_signals, infer_fft_mesh
@@ -122,10 +123,11 @@ ref = np.fft.fft(x)
 xs = shard_signals(x, mesh)
 assert infer_fft_mesh(xs) is mesh
 y1 = np.asarray(ops.fft(xs))             # inferred from committed sharding
-y2 = np.asarray(ops.fft(x, mesh=mesh))   # explicit mesh
+p = plan(FFTSpec(shape=x.shape, mesh=mesh))   # explicit plan
+y2 = np.asarray(p.fft(x))
 for y in (y1, y2):
     assert np.abs(y - ref).max() / np.abs(ref).max() < 4e-5
-back = np.asarray(ops.ifft(jnp.asarray(y2), mesh=mesh))
+back = np.asarray(p.ifft(jnp.asarray(y2)))
 assert np.abs(back - x).max() / np.abs(x).max() < 4e-5
 print('OK')
 """, devices=4)

@@ -127,7 +127,6 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core.fft.distributed import (distributed_fft, distributed_ifft,
                                         spectral_volume)
 from repro.core.fft import spectral
-from repro.kernels import ops
 from repro.launch.dryrun import collective_bytes
 from repro.launch.mesh import make_fft_mesh
 
@@ -152,10 +151,12 @@ assert cb["bytes"]["all-gather"] == 0.0
 mdl = spectral_volume(n, b, 4)
 assert abs(cb["total_bytes"] / mdl["hlo_bytes"] - 1.0) < 1e-3
 
-# ops-level threading: same pipeline through the auto-dispatch wrappers
-yt2 = ops.fft(x, mesh=mesh, natural_order=False)
+# plan-level threading: the same pipeline through the plan executors
+from repro.core.fft import FFTSpec, plan
+pt = plan(FFTSpec(shape=x.shape, mesh=mesh, natural_order=False))
+yt2 = pt.fft(x)
 np.testing.assert_array_equal(np.asarray(yt2), np.asarray(yt))
-back2 = np.asarray(ops.ifft(yt2, mesh=mesh, natural_order=False))
+back2 = np.asarray(pt.ifft(yt2))
 assert np.abs(back2 - x).max() / np.abs(x).max() < 4e-5
 
 # ragged batch exercises the pad+slice path (correctness, not budget)

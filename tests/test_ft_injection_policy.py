@@ -119,20 +119,27 @@ def test_poisson_schedule_deterministic_and_in_range():
 # ---------------------------------------------------------------------------
 
 
-def test_ftpolicy_kwargs_match_consumer_signatures():
-    """kernel_kwargs/mesh_kwargs stay in sync with the call sites they feed
+def test_ftpolicy_config_matches_consumer_signatures():
+    """kernel_kwargs stays in sync with the local kernel call site, and
+    to_ft_config() carries every policy knob into the plan API's FTConfig
     (a renamed knob would otherwise fail only at serve time)."""
-    from repro.core.fft.distributed import ft_distributed_fft
+    from repro.core.fft.api import FFTSpec, FTConfig
     from repro.kernels.ops import ft_fft
 
     pol = FTPolicy(mesh_groups=8, group_size=None,
                    recompute_uncorrectable=False)
     kernel_params = set(inspect.signature(ft_fft).parameters)
     assert set(pol.kernel_kwargs()) <= kernel_params
-    mesh_params = set(inspect.signature(ft_distributed_fft).parameters)
-    assert set(pol.mesh_kwargs()) <= mesh_params
-    assert pol.mesh_kwargs()["groups"] == 8
-    assert pol.mesh_kwargs()["recompute_uncorrectable"] is False
+    cfg = pol.to_ft_config()
+    assert isinstance(cfg, FTConfig)
+    assert cfg.groups == 8 and cfg.group_size is None
+    assert cfg.recompute_uncorrectable is False
+    assert cfg.threshold == pol.threshold
+    assert cfg.transactions == pol.transactions
+    assert cfg.encoding == pol.encoding
+    # the config is spec-embeddable (hashable, valid) as-is
+    spec = FFTSpec(shape=(16, 256), ft=cfg)
+    assert hash(spec) == hash(FFTSpec(shape=(16, 256), ft=pol.to_ft_config()))
     # frozen: policies are config values, not mutable state
     with pytest.raises(dataclasses.FrozenInstanceError):
         pol.threshold = 1.0

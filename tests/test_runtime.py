@@ -19,6 +19,29 @@ from repro.train import make_train_step, make_serve_step
 
 
 # ---------------------------------------------------------------------------
+# config registry
+# ---------------------------------------------------------------------------
+
+def test_config_registry_builds_every_arch():
+    """Every registered architecture (and its assigned-id alias) yields a
+    coherent full + smoke config pair — a bad config file should fail here
+    in the fast lane, not at train/serve launch."""
+    from repro.configs import ARCHS, _ALIASES, get_config
+
+    for name in ARCHS + list(_ALIASES):
+        full = get_config(name)
+        if not hasattr(full, "vocab_size"):
+            continue   # the paper's FFT workload config, not a model
+        smoke = get_smoke_config(name)
+        for cfg in (full, smoke):
+            assert cfg.vocab_size > 0 and cfg.num_layers > 0
+            assert cfg.d_model % max(cfg.num_heads, 1) == 0
+        # smoke configs must actually be reduced (CPU-runnable)
+        assert smoke.num_layers <= full.num_layers
+        assert smoke.d_model <= full.d_model
+
+
+# ---------------------------------------------------------------------------
 # optimizer
 # ---------------------------------------------------------------------------
 
