@@ -10,9 +10,10 @@ __all__ = [
     "fft", "ifft", "fft_with_plan", "block_fft_stages", "naive_dft",
     "radix2_fft", "fft_large",
 ]
-from .extensions import rfft, irfft, fft2, ifft2, ft_ifft  # noqa: E402
+from .extensions import (rfft, irfft, fft2, ifft2, rfft2,  # noqa: E402
+                         irfft2, ft_ifft)
 
-__all__ += ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
+__all__ += ["rfft", "irfft", "fft2", "ifft2", "rfft2", "irfft2", "ft_ifft"]
 
 from .distributed import (DistPlan, DistFFTResult, make_dist_plan,  # noqa: E402
                           distributed_fft, distributed_ifft,
@@ -32,11 +33,15 @@ __all__ += ["fft_convolve", "correlate", "power_spectrum", "conv_spec"]
 from .multidim import (choose_decomp, collective_volume_nd,  # noqa: E402
                        distributed_fft2, distributed_ifft2,
                        distributed_fftn, distributed_ifftn,
-                       ft_distributed_fft2, fft_convolve2)
+                       distributed_rfft2, distributed_irfft2,
+                       ft_distributed_fft2, ft_distributed_rfft2,
+                       fft_convolve2, rslab_feasible)
 
 __all__ += ["choose_decomp", "collective_volume_nd", "distributed_fft2",
             "distributed_ifft2", "distributed_fftn", "distributed_ifftn",
-            "ft_distributed_fft2", "fft_convolve2"]
+            "distributed_rfft2", "distributed_irfft2",
+            "ft_distributed_fft2", "ft_distributed_rfft2", "fft_convolve2",
+            "rslab_feasible"]
 
 # the cuFFT-style plan/execute front door (the single dispatch path every
 # public entry point funnels through)

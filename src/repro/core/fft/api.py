@@ -106,6 +106,15 @@ class FFTSpec:
     ``interpret`` routes local power-of-two paths through the Pallas block
     kernel. Specs are value objects: equal specs hash equal and hit the
     same cached :class:`FFTPlan`.
+
+    ``real=True`` declares the OPERAND real-valued: ``shape`` stays the
+    full real shape, ``dtype`` is the complex precision the half spectrum
+    carries (``complex64``/``complex128``), and the plan binds the
+    ``rfft/irfft`` (rank 1) or ``rfft2/irfft2`` (rank 2) executors — the
+    packed half-length transforms that move about half the C2C path's
+    collective bytes. Real plans are natural-order only (the Hermitian
+    unpack indexes bins by ``k``) and their ft pipeline is the rank-2 slab
+    (the 1-D real path has none).
     """
 
     shape: tuple[int, ...]
@@ -118,6 +127,7 @@ class FFTSpec:
     natural_order: bool = True
     ft: FTConfig | None = None
     interpret: bool | None = None
+    real: bool = False
 
     def __post_init__(self):
         shape = tuple(int(s) for s in self.shape)
@@ -159,6 +169,21 @@ class FFTSpec:
         if self.ft is not None and not isinstance(self.ft, FTConfig):
             raise ValueError(f"FFTSpec.ft must be an FTConfig, "
                              f"got {type(self.ft).__name__}")
+        if self.real:
+            if self.rank == 3:
+                raise ValueError(
+                    "real plans are rank 1 (rfft) or rank 2 (rfft2); rank=3 "
+                    "has no real pipeline yet")
+            if not self.natural_order:
+                raise ValueError(
+                    "real plans are natural-order only — the Hermitian "
+                    "unpack indexes half-spectrum bins by k, which the "
+                    "transposed digit pairing scrambles")
+            if self.ft is not None and self.rank != 2:
+                raise ValueError(
+                    "the 1-D real path has no ft pipeline — fault-tolerant "
+                    "real transforms are the rank-2 slab (rfft2 with "
+                    "FFTSpec(rank=2, real=True, ft=...))")
 
     # -- convenience ------------------------------------------------------
 
@@ -182,14 +207,16 @@ def spec_for(x, *, rank: int = 1, mesh: Mesh | None = None,
              axis: str = FFT_AXIS, data_axis: str | None = _AUTO,
              decomp: str = "auto", natural_order: bool = True,
              ft: FTConfig | None = None,
-             interpret: bool | None = None) -> FFTSpec:
+             interpret: bool | None = None, real: bool = False) -> FFTSpec:
     """Build the :class:`FFTSpec` describing ``x``'s transform.
 
     With ``mesh=None`` the mesh is inferred from ``x``'s committed sharding
     (the legacy auto-dispatch contract of ``kernels.ops``): an operand
-    already laid out over an ``axis`` mesh plans distributed. Real dtypes
-    map to ``complex64`` — exactly the coercion the legacy entry points
-    applied.
+    already laid out over an ``axis`` mesh plans distributed. On a C2C spec
+    real dtypes map to ``complex64`` — exactly the coercion the legacy
+    entry points applied; on a *real* spec (``real=True``) the operand's
+    precision is KEPT: ``float64`` signals plan a ``complex128`` half
+    spectrum.
     """
     x = jnp.asarray(x)
     if mesh is None:
@@ -197,10 +224,12 @@ def spec_for(x, *, rank: int = 1, mesh: Mesh | None = None,
         mesh = infer_fft_mesh(x, axis)
     dt = x.dtype
     if not jnp.issubdtype(dt, jnp.complexfloating):
-        dt = jnp.dtype(jnp.complex64)
+        dt = jnp.dtype(jnp.complex128 if (real and dt == jnp.float64)
+                       else jnp.complex64)
     return FFTSpec(shape=tuple(x.shape), dtype=jnp.dtype(dt).name, rank=rank,
                    mesh=mesh, axis=axis, data_axis=data_axis, decomp=decomp,
-                   natural_order=natural_order, ft=ft, interpret=interpret)
+                   natural_order=natural_order, ft=ft, interpret=interpret,
+                   real=real)
 
 
 def _feasible_1d(n: int, shards: int) -> bool:
@@ -251,6 +280,8 @@ class FFTPlan:
                 self.groups = resolve_abft_groups(
                     self.batch, groups=ft.groups, group_size=ft.group_size,
                     data_shards=self.dsize)
+        self._rdtype = jnp.dtype(
+            jnp.float64 if spec.dtype == "complex128" else jnp.float32)
         if self.rank == 1:
             self._build_1d()
         else:
@@ -264,6 +295,9 @@ class FFTPlan:
 
         spec = self.spec
         n = self.tshape[0]
+        if spec.real:
+            self._build_1d_real(n)
+            return
         if not self.sharded:
             self.decomp = "local"
             self.dist_plan = None
@@ -303,11 +337,120 @@ class FFTPlan:
             ft=ft is not None, natural_order=spec.natural_order,
             groups=self.groups or 1, data_shards=self._model_dsize())
 
+    def _build_1d_real(self, n: int):
+        """Bind the rank-1 real executors (rfft/irfft).
+
+        The transform itself is ``extensions.rfft``'s packed half-length
+        C2C; this plan resolves once whether that half-length transform can
+        pencil-split over the mesh, and models its collective volume
+        (``collective_volume(real=True)`` — half the C2C bytes).
+        """
+        from repro.parallel.fft_sharding import layout_specs
+
+        spec = self.spec
+        self._fwd = self._inv = None          # C2C executors raise on real
+        self.dist_plan = None
+        self.in_spec = self.out_spec = None
+        self.volume = None
+        self.decomp = "local"
+        if self.sharded and n % 2 == 0 \
+                and _feasible_1d(n // 2, self.shards):
+            self.decomp = "pencil"
+            self.dist_plan = make_dist_plan(n // 2, self.shards, spec.axis)
+            self.in_spec, self.out_spec = layout_specs(
+                1, "pencil", axis=spec.axis, data_axis=self.daxis)
+            self.volume = collective_volume(
+                n, max(self.batch, 1), self.shards,
+                itemsize=self.spec.np_dtype.itemsize,
+                natural_order=True, data_shards=self._model_dsize(),
+                real=True)
+
+    def _build_nd_real(self):
+        """Bind the rank-2 real executors (rfft2/irfft2).
+
+        slab -> the native half-spectrum pipeline (packed row pass, padded
+        ``C/2 + D``-column transpose, ~half the C2C bytes — see
+        ``multidim.distributed_rfft2``); pencil -> the composed two-pass
+        form (1-D distributed rfft over columns, C2C over rows — correct on
+        meshes the slab cannot tile); no mesh -> local.
+        """
+        from repro.parallel.fft_sharding import layout_specs
+
+        spec = self.spec
+        ft = spec.ft
+        cc = self.tshape[-1]
+        if not self.sharded:
+            if ft is not None:
+                raise ValueError(
+                    "fault-tolerant rfft2 runs the sharded grouped ABFT on "
+                    "the slab transpose: the spec needs a mesh with an "
+                    f"'{spec.axis}' axis of >= 2 devices")
+            self.decomp = "local"
+            self.in_spec = self.out_spec = None
+            self.volume = None
+            self._rfwd = multidim._local_rfft2
+            self._rinv = functools.partial(multidim._local_irfft2, cc=cc)
+            return
+        decomp = spec.decomp
+        feasible = multidim.rslab_feasible(self.tshape, self.shards)
+        if decomp == "auto":
+            decomp = (multidim.DECOMP_SLAB if feasible
+                      else multidim.DECOMP_PENCIL)
+        if ft is not None and decomp != multidim.DECOMP_SLAB:
+            raise ValueError(
+                "grouped ABFT rides the slab inter-axis transpose: an ft "
+                f"real spec needs decomp='slab' (or 'auto'), got {decomp!r}")
+        if decomp == multidim.DECOMP_SLAB and not feasible:
+            raise ValueError(
+                f"infeasible decomp: the real slab needs power-of-two axes "
+                f"with {self.shards} | {self.tshape[0]} and "
+                f"{self.shards} | {self.tshape[-1]}//2, got {self.tshape} — "
+                f"use decomp='pencil' (the composed real path) or a smaller "
+                f"fft axis")
+        self.decomp = decomp
+        if decomp == multidim.DECOMP_SLAB:
+            self.in_spec, self.out_spec = layout_specs(
+                2, decomp, axis=spec.axis, data_axis=self.daxis, real=True)
+            self._rfwd = functools.partial(
+                multidim.distributed_rfft2, mesh=self.mesh, axis=spec.axis,
+                data_axis=self.daxis)
+            self._rinv = functools.partial(
+                multidim.distributed_irfft2, mesh=self.mesh, axis=spec.axis,
+                data_axis=self.daxis)
+            # pre-build the jitted pipelines (first execution stays a
+            # straight dispatch, the plan contract)
+            multidim._rslab_fft2_fn(self.mesh, spec.axis, self.daxis)
+            multidim._rslab_ifft2_fn(self.mesh, spec.axis, self.daxis)
+            if ft is not None:
+                multidim._ft_rslab_fft2_fn(
+                    self.mesh, spec.axis, float(ft.threshold),
+                    bool(ft.correct), self.groups, self.daxis)
+            self.volume = multidim.collective_volume_nd(
+                self.tshape, max(self.batch, 1), self.shards, decomp=decomp,
+                itemsize=self.spec.np_dtype.itemsize, ft=ft is not None,
+                groups=self.groups or 1, data_shards=self._model_dsize(),
+                natural_order=True, real=True)
+            return
+        # pencil: the composed two-pass real path — its collectives are the
+        # 1-D pieces', so there is no single nd volume model to bind
+        self.in_spec = self.out_spec = None
+        self.volume = None
+        self._rfwd = functools.partial(
+            multidim._composed_rfft2, mesh=self.mesh, axis=spec.axis,
+            data_axis=self.daxis)
+        self._rinv = functools.partial(
+            multidim._composed_irfft2, cc=cc, mesh=self.mesh, axis=spec.axis,
+            data_axis=self.daxis)
+
     def _build_nd(self):
         from repro.parallel.fft_sharding import layout_specs
 
         spec = self.spec
         ft = spec.ft
+        if spec.real:
+            self._fwd = self._inv = None      # C2C executors raise on real
+            self._build_nd_real()
+            return
         if not self.sharded:
             if ft is not None:
                 raise ValueError(
@@ -394,9 +537,16 @@ class FFTPlan:
         return self.dsize
 
     def _coerce(self, x):
-        """Match the plan dtype (real inputs get the legacy complex
-        coercion, at the plan's precision)."""
+        """Match the plan dtype: a C2C plan coerces real inputs to its
+        complex dtype (the legacy contract); a real plan REJECTS complex
+        operands and casts to its real precision."""
         x = jnp.asarray(x)
+        if self.spec.real:
+            if jnp.issubdtype(x.dtype, jnp.complexfloating):
+                raise ValueError(
+                    f"a real plan takes a real operand, got {x.dtype} — "
+                    f"build a C2C FFTSpec (real=False) for complex signals")
+            return x if x.dtype == self._rdtype else x.astype(self._rdtype)
         if x.dtype != self.spec.np_dtype:
             x = x.astype(self.spec.np_dtype)
         return x
@@ -410,9 +560,10 @@ class FFTPlan:
 
     def shard(self, x):
         """Place ``x`` into the plan's resident input layout (a no-op
-        relayout on an unsharded plan)."""
+        relayout on an unsharded plan, or when the plan has no resident
+        layout — local-fallback / composed real paths)."""
         x = self._coerce(x)
-        if not self.sharded:
+        if not self.sharded or self.in_spec is None:
             return x
         from repro.parallel.fft_sharding import shard_grid, shard_signals
         if self.rank == 1:
@@ -425,6 +576,11 @@ class FFTPlan:
 
     def fft(self, x):
         """Forward transform over the planned axes (complex in/out)."""
+        if self.spec.real:
+            raise ValueError(
+                "this plan is real-input — its executors are rfft/irfft "
+                "(rfft2/irfft2); build a C2C FFTSpec (real=False) for "
+                "fft/ifft")
         x = self._coerce(x)
         self._check_tshape(x)
         return self._fwd(x)
@@ -432,6 +588,11 @@ class FFTPlan:
     def ifft(self, x):
         """Inverse transform (1/N normalized); a transposed-order plan
         consumes the forward's transposed-digit output (TRANSPOSED_IN)."""
+        if self.spec.real:
+            raise ValueError(
+                "this plan is real-input — its executors are rfft/irfft "
+                "(rfft2/irfft2); build a C2C FFTSpec (real=False) for "
+                "fft/ifft")
         x = self._coerce(x)
         self._check_tshape(x)
         return self._inv(x)
@@ -449,6 +610,62 @@ class FFTPlan:
 
     fftn = fft2
     ifftn = ifft2
+
+    # -- real-input executors ---------------------------------------------
+
+    def rfft(self, x):
+        """Real-input forward transform -> the ``(..., N/2+1)``-bin half
+        spectrum (rank 1) or ``(..., R, C/2+1)`` (rank 2). Requires a real
+        plan (``FFTSpec(real=True)``); complex operands are rejected, not
+        silently truncated."""
+        if not self.spec.real:
+            raise ValueError(
+                "this plan is C2C — build the FFTSpec with real=True for "
+                "rfft/irfft")
+        x = self._coerce(x)
+        self._check_tshape(x)
+        if self.rank == 1:
+            from . import extensions
+            return extensions.rfft(
+                x, mesh=self.mesh if self.sharded else None,
+                axis=self.spec.axis, data_axis=self.daxis)
+        return self._rfwd(x)
+
+    def irfft(self, y):
+        """Inverse of :meth:`rfft`: half spectrum -> the planned real
+        shape. The spectrum's transform axes must be the planned shape's
+        Hermitian half (``last axis -> n//2 + 1`` bins)."""
+        if not self.spec.real:
+            raise ValueError(
+                "this plan is C2C — build the FFTSpec with real=True for "
+                "rfft/irfft")
+        y = jnp.asarray(y)
+        want = self.tshape[:-1] + (self.tshape[-1] // 2 + 1,)
+        if tuple(y.shape[-self.rank:]) != want:
+            raise ValueError(
+                f"half-spectrum axes {tuple(y.shape[-self.rank:])} do not "
+                f"match the planned {want} (the Hermitian half of "
+                f"{self.tshape}) — build a new FFTSpec")
+        if y.dtype != self.spec.np_dtype:
+            y = y.astype(self.spec.np_dtype)
+        if self.rank == 1:
+            from . import extensions
+            return extensions.irfft(
+                y, n=self.tshape[0],
+                mesh=self.mesh if self.sharded else None,
+                axis=self.spec.axis, data_axis=self.daxis)
+        return self._rinv(y)
+
+    # rank-2 spellings (same executors; the rank lives in the spec)
+    def rfft2(self, x):
+        if self.rank != 2:
+            raise ValueError("rfft2 needs a rank-2 FFTSpec")
+        return self.rfft(x)
+
+    def irfft2(self, y):
+        if self.rank != 2:
+            raise ValueError("irfft2 needs a rank-2 FFTSpec")
+        return self.irfft(y)
 
     def ft_fft(self, x, *, inject=None, bs=None):
         """Fault-tolerant forward transform (requires ``spec.ft``).
@@ -471,6 +688,14 @@ class FFTPlan:
                 f"operand batch {b} does not match the planned {self.batch} "
                 f"— the ABFT group layout (G={self.groups}) was resolved "
                 f"for the spec's batch; build a new FFTSpec")
+        if self.spec.real:
+            # rank-2 slab only (spec validation): the grouped two-side
+            # ABFT on the Hermitian-symmetric checksum layout
+            return multidim.ft_distributed_rfft2(
+                x, self.mesh, axis=self.spec.axis, threshold=ft.threshold,
+                correct=ft.correct, inject=inject, groups=self.groups,
+                data_axis=self.daxis,
+                recompute_uncorrectable=ft.recompute_uncorrectable)
         if self.rank == 1 and not self.sharded:
             from repro.kernels import ops as _ops
             res = _ops._ft_fft_local(
@@ -536,7 +761,11 @@ class FFTPlan:
 
     def power_spectrum(self, x):
         """Periodogram ``|X|^2 / N``; on a transposed-order plan the bins
-        stay in the transposed digit order (the cheap choice)."""
+        stay in the transposed digit order (the cheap choice). A real plan
+        returns the one-sided ``N/2+1``-bin spectrum via the packed rfft
+        (always natural order)."""
+        if self.spec.real:
+            return (jnp.abs(self.rfft(x)) ** 2) / self.n
         x = self._coerce(x)
         self._check_tshape(x)
         if self.rank == 1 and not self.sharded:

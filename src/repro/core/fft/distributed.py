@@ -793,7 +793,8 @@ def ft_distributed_fft(
 
 def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
                       ft: bool = False, natural_order: bool = True,
-                      groups: int = 1, data_shards: int = 1) -> dict:
+                      groups: int = 1, data_shards: int = 1,
+                      real: bool = False) -> dict:
     """Analytic per-device communication model of one distributed transform.
 
     Three terms (cross-checked against the post-partitioning HLO by
@@ -818,6 +819,13 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
       all-to-all volume (they ride the same transpose), which is the
       ``abft_overhead`` field.
 
+    ``real=True`` models the rfft packing trick (``extensions.rfft``):
+    the executed C2C transform — and so every collective — runs at the
+    packed HALF length ``n // 2`` (the Hermitian unpack is elementwise,
+    collective-free), halving both the transpose and the natural-order
+    gather. The 1-D real path has no ft pipeline (rank-2 ``rfft2`` rides
+    the slab ABFT), so ``real=True`` with ``ft=True`` raises.
+
     ``*_wire`` entries are true link-crossing bytes; ``hlo_bytes`` is what
     :func:`repro.launch.dryrun.collective_bytes` counts for the same program
     (full per-device collective operand bytes, all-reduce at ring factor 2).
@@ -825,6 +833,13 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
     if ft and groups % data_shards:
         raise ValueError(f"groups={groups} must divide over "
                          f"data_shards={data_shards}")
+    if real:
+        if ft:
+            raise ValueError(
+                "the 1-D real path has no ft pipeline — grouped ABFT on "
+                "real input rides the 2-D slab (collective_volume_nd with "
+                "real=True)")
+        n = n // 2   # the packed half-length C2C is the whole collective cost
     rows = (batch + (2 * groups if ft else 0)) / data_shards
     a2a_local = rows * n * itemsize / shards
     a2a_wire = a2a_local * (shards - 1) / shards
@@ -837,6 +852,7 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
         "shards": shards,
         "data_shards": data_shards,
         "groups": groups,
+        "real": real,
         "passes": 2,  # one distributed split -> exactly one transpose
         "all_to_all_wire": a2a_wire,
         "gather_wire": gather_wire,
@@ -848,7 +864,8 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
 
 
 def spectral_volume(n: int, batch: int, shards: int, *, kernel_batch: int = 0,
-                    itemsize: int = 8, data_shards: int = 1) -> dict:
+                    itemsize: int = 8, data_shards: int = 1,
+                    real: bool = False) -> dict:
     """Analytic per-device model of one transposed-order spectral round trip
     (forward -> pointwise -> inverse; see ``core.fft.spectral``).
 
@@ -868,8 +885,13 @@ def spectral_volume(n: int, batch: int, shards: int, *, kernel_batch: int = 0,
     natural_order=False)``). On a 2-D batch x pencil mesh each data shard
     moves ``1/data_shards`` of the batch rows; ``shards`` is the fft-axis
     size.
+
+    ``real=True`` models the packed real convolution (both operands real):
+    the kernel rides the imaginary part of ``a + i*v``, so its rows vanish
+    from the forward transpose entirely — ``kernel_batch`` is ignored and
+    both passes move exactly ``batch / data_shards`` rows.
     """
-    rows_fwd = batch / data_shards + kernel_batch
+    rows_fwd = batch / data_shards + (0 if real else kernel_batch)
     rows_inv = batch / data_shards
     fwd_local = rows_fwd * n * itemsize / shards
     inv_local = rows_inv * n * itemsize / shards
@@ -877,6 +899,7 @@ def spectral_volume(n: int, batch: int, shards: int, *, kernel_batch: int = 0,
     return {
         "shards": shards,
         "data_shards": data_shards,
+        "real": real,
         "all_to_all_count": 2,
         "all_gather_count": 0,
         "all_to_all_wire": wire,

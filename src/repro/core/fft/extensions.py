@@ -27,7 +27,14 @@ import numpy as np
 from .distributed import _AUTO, FFT_AXIS, _resolve_mesh
 from .stockham import fft as _fft, ifft as _ifft, naive_dft
 
-__all__ = ["rfft", "irfft", "fft2", "ifft2", "ft_ifft"]
+__all__ = ["rfft", "irfft", "fft2", "ifft2", "rfft2", "irfft2", "ft_ifft"]
+
+
+def _complex_for(dtype) -> jnp.dtype:
+    """The complex dtype a real input of ``dtype`` promotes to: float64
+    keeps double precision (complex128), everything else is complex64."""
+    return jnp.dtype(jnp.complex128 if dtype == jnp.float64
+                     else jnp.complex64)
 
 
 def _plan_c2c(z, mesh, axis, data_axis, *, natural_order=True):
@@ -51,14 +58,22 @@ def rfft(x: jax.Array, *, mesh=None, axis: str = FFT_AXIS,
     ``mesh`` distributes the underlying half-length C2C transform over the
     pencil pipeline (the Hermitian unpacking is elementwise and stays
     wherever GSPMD puts it); infeasible sizes fall back to the local path.
+    Odd lengths cannot split into the even/odd pack, so they run the local
+    O(n^2) direct DFT and crop to the ``n//2 + 1`` bins — the same
+    documented fallback as the odd-``n`` :func:`irfft` branch.
     """
     x = jnp.asarray(x)
     n = x.shape[-1]
-    assert n % 2 == 0, "even length required"
+    if n == 0:
+        raise ValueError("rfft: empty signal axis (n=0) has no spectrum")
+    if n % 2:
+        # odd n: no even/odd split — direct DFT, cropped half spectrum
+        full = naive_dft(x.astype(_complex_for(x.dtype)))
+        return full[..., :n // 2 + 1]
     half = n // 2
     # pack: z[k] = x[2k] + i x[2k+1]; one half-length C2C transform
     z = x[..., 0::2] + 1j * x[..., 1::2]
-    z = z.astype(jnp.complex64 if x.dtype != jnp.float64 else jnp.complex128)
+    z = z.astype(_complex_for(x.dtype))
     p = _plan_c2c(z, mesh, axis, data_axis)
     zf = p.fft(z) if p is not None else _fft(z)
     k = jnp.arange(half + 1)
@@ -86,8 +101,19 @@ def irfft(y: jax.Array, n: int | None = None, *, mesh=None,
     ``mesh`` is passed (the documented fallback).
     """
     y = jnp.asarray(y)
+    if y.shape[-1] == 0:
+        raise ValueError("irfft: empty spectrum (0 bins)")
     if n is None:
+        if y.shape[-1] == 1:
+            raise ValueError(
+                "irfft: a single-bin spectrum has no default length "
+                "(2*(bins-1) = 0) — pass n explicitly (n=1 or n=2)")
         n = 2 * (y.shape[-1] - 1)
+    if n <= 0:
+        raise ValueError(f"irfft: output length must be positive, got n={n}")
+    if n == 1:
+        # one sample: the spectrum is just the (real) DC bin
+        return jnp.real(y[..., :1])
     if n % 2:
         m = (n + 1) // 2   # bins of an odd-length real signal
         if y.shape[-1] < m:
@@ -121,7 +147,7 @@ def fft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
 
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
-        x = x.astype(jnp.complex64)
+        x = x.astype(_complex_for(x.dtype))
     spec = api.spec_for(x, rank=2, mesh=mesh, axis=axis,
                         natural_order=natural_order, decomp=decomp,
                         interpret=interpret)
@@ -138,11 +164,59 @@ def ifft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
 
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
-        x = x.astype(jnp.complex64)
+        x = x.astype(_complex_for(x.dtype))
     spec = api.spec_for(x, rank=2, mesh=mesh, axis=axis,
                         natural_order=natural_order, decomp=decomp,
                         interpret=interpret)
     return api.plan(spec).ifft(x)
+
+
+def rfft2(x: jax.Array, *, mesh=None, interpret: bool | None = None,
+          axis: str = FFT_AXIS, data_axis: str | None = _AUTO,
+          decomp: str = "auto") -> jax.Array:
+    """2-D real-input FFT over the last two axes -> (..., R, C/2+1) half
+    spectrum — spec-builder sugar over a rank-2 *real* plan.
+
+    On a mesh the row pass is the half-length packed C2C transform and only
+    the C/2+1 surviving column pencils (padded to a shard-divisible width)
+    flow through the inter-axis transpose — about half the all-to-all bytes
+    of :func:`fft2` on the same grid (see ``multidim.distributed_rfft2``).
+    """
+    from . import api
+
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError(f"rfft2 takes a real input, got {x.dtype}")
+    spec = api.spec_for(x, rank=2, mesh=mesh, axis=axis, data_axis=data_axis,
+                        decomp=decomp, interpret=interpret, real=True)
+    return api.plan(spec).rfft2(x)
+
+
+def irfft2(y: jax.Array, *, mesh=None, interpret: bool | None = None,
+           axis: str = FFT_AXIS, data_axis: str | None = _AUTO,
+           decomp: str = "auto") -> jax.Array:
+    """Inverse of :func:`rfft2`: (..., R, C/2+1) half spectrum ->
+    (..., R, C) real grid with ``C = 2*(bins-1)`` (even columns only; odd
+    grids go through the local :func:`irfft` per axis)."""
+    from . import api
+    from repro.parallel.fft_sharding import infer_fft_mesh
+
+    y = jnp.asarray(y)
+    if y.ndim < 2:
+        raise ValueError(f"irfft2 needs a rank >= 2 spectrum, got {y.shape}")
+    if y.shape[-1] < 2:
+        raise ValueError(
+            "irfft2: a single-bin half spectrum has no default width — "
+            "the columns' full length 2*(bins-1) would be 0")
+    cc = 2 * (y.shape[-1] - 1)
+    dtype = "complex128" if y.dtype in (jnp.complex128, jnp.float64) \
+        else "complex64"
+    spec = api.FFTSpec(shape=y.shape[:-2] + (y.shape[-2], cc), dtype=dtype,
+                       rank=2, mesh=mesh if mesh is not None
+                       else infer_fft_mesh(y, axis), axis=axis,
+                       data_axis=data_axis, decomp=decomp,
+                       interpret=interpret, real=True)
+    return api.plan(spec).irfft2(y)
 
 
 def ft_ifft(x: jax.Array, **ft_kwargs):
@@ -153,7 +227,7 @@ def ft_ifft(x: jax.Array, **ft_kwargs):
 
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
-        x = x.astype(jnp.complex64)
+        x = x.astype(_complex_for(x.dtype))
     n = x.shape[-1]
     res = ops.ft_fft(jnp.conj(x), **ft_kwargs)
     y = jnp.conj(res.y) / n

@@ -48,6 +48,7 @@ all-gather (HLO-verified).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -67,6 +68,8 @@ __all__ = [
     "DECOMP_SLAB", "DECOMP_PENCIL", "choose_decomp", "collective_volume_nd",
     "distributed_fft2", "distributed_ifft2", "distributed_fftn",
     "distributed_ifftn", "ft_distributed_fft2", "fft_convolve2",
+    "rslab_feasible", "distributed_rfft2", "distributed_irfft2",
+    "ft_distributed_rfft2",
 ]
 
 DECOMP_SLAB = "slab"
@@ -133,6 +136,17 @@ def slab_feasible(shape: tuple[int, ...], fft_shards: int) -> bool:
             and shape[0] % fft_shards == 0 and shape[-1] % fft_shards == 0)
 
 
+def rslab_feasible(shape: tuple[int, ...], fft_shards: int) -> bool:
+    """Real-input slab feasibility: a 2-D power-of-two grid whose rows AND
+    packed half width both tile over the fft axis — ``D | R`` for the input
+    sharding and ``D | C/2`` so the padded half spectrum ``Cp = C/2 + D``
+    stays shard-divisible through the inter-axis transpose (which needs
+    ``C >= 2*D``). Rank-3 real grids are not supported."""
+    return (len(shape) == 2 and all(_is_pow2(s) for s in shape)
+            and shape[-1] >= 2 and shape[0] % fft_shards == 0
+            and (shape[-1] // 2) % fft_shards == 0)
+
+
 def pencil_feasible(shape: tuple[int, ...], fft_shards: int,
                     data_shards: int = 1) -> bool:
     """Pencil digit-splits the last axis over ``fft`` and the second-to-last
@@ -148,8 +162,8 @@ def pencil_feasible(shape: tuple[int, ...], fft_shards: int,
 def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
                          *, decomp: str = DECOMP_SLAB, itemsize: int = 8,
                          ft: bool = False, groups: int = 1,
-                         data_shards: int = 1,
-                         natural_order: bool = True) -> dict:
+                         data_shards: int = 1, natural_order: bool = True,
+                         real: bool = False) -> dict:
     """Analytic per-device communication model of one distributed n-D
     transform over ``shape`` (cross-checked against the post-partitioning
     HLO by ``benchmarks/fft_distributed.py``).
@@ -173,12 +187,26 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
     ``full = batch * grid * itemsize``. ABFT composes with the slab
     transpose only — ``ft=True`` raises here.
 
+    **real** (``real=True``, slab only): the transpose moves the PADDED
+    half spectrum — ``Cp = C/2 + D`` columns instead of C — so every slab
+    a2a/local term scales by ``(C/2 + D)/C`` (about 0.5 + D/C, the ~2x
+    byte win of :func:`distributed_rfft2`); checksum grids ride at the
+    same half width, and the verdict psum is unchanged. The pencil real
+    path is a composition of two 1-D transforms with no closed-form nd
+    model here, so ``real=True`` with ``decomp='pencil'`` raises.
+
     ``*_wire`` entries are link-crossing bytes; ``hlo_bytes`` matches
     :func:`repro.launch.dryrun.collective_bytes` on the same program.
     """
     if decomp not in _DECOMPS:
         raise ValueError(f"decomp must be {'|'.join(_DECOMPS)}, got {decomp!r}")
-    grid = int(np.prod(shape))
+    if real and decomp != DECOMP_SLAB:
+        raise ValueError(
+            "the real-input model is slab-only (rfft2 rides the padded "
+            "half-spectrum transpose); the pencil real path composes two "
+            "1-D transforms — model each with collective_volume(real=True)")
+    cols = shape[-1] // 2 + fft_shards if real else shape[-1]
+    grid = int(np.prod(shape[:-1])) * cols
     d = fft_shards
     dd = data_shards
     if decomp == DECOMP_SLAB:
@@ -222,6 +250,7 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
         "shards": d,
         "data_shards": dd,
         "groups": groups,
+        "real": real,
         "all_to_all_count": a2a_count,
         "all_gather_count": gather_count,
         "all_to_all_wire": a2a_wire,
@@ -460,6 +489,258 @@ def _pencil_to_transposed_cube(x, r1, r2, c1, c2):
     nl = len(lead)
     perm = list(range(nl)) + [nl + 1, nl, nl + 3, nl + 2]
     return z.transpose(perm).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# real-input (half-spectrum) transforms: rfft2 / irfft2 on the slab
+# ---------------------------------------------------------------------------
+#
+# The 1-D Hermitian packing trick (extensions.rfft) composed with the slab
+# row pass: the column transform of a real (R, C) grid runs as ONE C2C FFT
+# of length C/2 on z = x[2k] + i*x[2k+1], the elementwise unpack recovers
+# the C/2+1 surviving half-spectrum bins, and only those columns — padded
+# with D-1 dead zero columns to Cp = C/2 + D so the all-to-all's split axis
+# stays shard-divisible — flow through the inter-axis transpose before the
+# row FFT. Roughly HALF the all-to-all bytes of the C2C slab on the same
+# grid ((C/2 + D)/C, modeled by collective_volume_nd(real=True)).
+
+
+def _complex_of(dtype) -> jnp.dtype:
+    return jnp.dtype(jnp.complex128 if dtype in (jnp.float64, jnp.complex128)
+                     else jnp.complex64)
+
+
+def _unpack_half(zf: jax.Array, cc: int) -> jax.Array:
+    """Hermitian unpack of the packed half-length spectrum: (..., C/2)
+    C2C bins of z = x_even + i*x_odd -> the (..., C/2+1) rfft bins."""
+    half = cc // 2
+    k = jnp.arange(half + 1)
+    w = jnp.exp(-2j * np.pi * k / cc).astype(zf.dtype)
+    zf_ext = jnp.concatenate([zf, zf[..., :1]], axis=-1)      # Z[half] = Z[0]
+    zconj = jnp.conj(zf_ext[..., ::-1])                        # Z*[half-k]
+    return 0.5 * (zf_ext + zconj) - 0.5j * w * (zf_ext - zconj)
+
+
+def _rfft_cols(x: jax.Array) -> jax.Array:
+    """Packed rfft over the (even-length) last axis: (..., C) real ->
+    (..., C/2+1) half spectrum, via one half-length C2C transform."""
+    cc = x.shape[-1]
+    z = (x[..., 0::2] + 1j * x[..., 1::2]).astype(_complex_of(x.dtype))
+    return _unpack_half(_local_axis_fft(z, -1, inverse=False), cc)
+
+
+def _irfft_cols(y: jax.Array) -> jax.Array:
+    """Inverse of :func:`_rfft_cols` (normalized): (..., C/2+1) half
+    spectrum -> (..., C) real, C = 2*(bins-1). Recovers the packed
+    half-length time signal z = x_even + i*x_odd from the spectrum's
+    even/odd split, then interleaves its real and imaginary parts."""
+    half = y.shape[-1] - 1
+    cc = 2 * half
+    k = jnp.arange(half)
+    winv = jnp.exp(2j * np.pi * k / cc).astype(y.dtype)
+    yh = y[..., :half]
+    ymir = jnp.conj(y[..., 1:][..., ::-1])                     # Y*[half-k]
+    e = 0.5 * (yh + ymir)
+    o = 0.5 * winv * (yh - ymir)
+    z = _local_axis_fft(e + 1j * o, -1, inverse=True) / half
+    out = jnp.stack([jnp.real(z), jnp.imag(z)], axis=-1)
+    return out.reshape(out.shape[:-2] + (cc,))
+
+
+def _local_rfft2(x: jax.Array) -> jax.Array:
+    """Local rfft2 over the last two axes ((..., R, C) real ->
+    (..., R, C/2+1)); odd C runs the direct DFT and crops (the same
+    fallback as the odd-n 1-D paths)."""
+    cc = x.shape[-1]
+    if cc % 2:
+        z = _local_axis_fft(x.astype(_complex_of(x.dtype)), -1,
+                            inverse=False)[..., :cc // 2 + 1]
+    else:
+        z = _rfft_cols(x)
+    return _local_axis_fft(z, -2, inverse=False)
+
+
+def _local_irfft2(y: jax.Array, *, cc: int | None = None) -> jax.Array:
+    """Local irfft2: (..., R, bins) half spectrum -> (..., R, cc) real
+    (default ``cc = 2*(bins-1)``; odd ``cc`` reconstructs the full
+    Hermitian spectrum and runs the direct inverse DFT)."""
+    bins = y.shape[-1]
+    if cc is None:
+        cc = 2 * (bins - 1)
+    rr = y.shape[-2]
+    y = y.astype(_complex_of(y.dtype))
+    z = _local_axis_fft(y, -2, inverse=True) / rr
+    if cc % 2:
+        m = (cc + 1) // 2   # bins of an odd-length real signal
+        yh = z[..., :m]
+        tail = jnp.conj(yh[..., 1:][..., ::-1])
+        full = jnp.concatenate([yh, tail], axis=-1)
+        return jnp.real(naive_dft(full, inverse=True))
+    return _irfft_cols(z[..., :cc // 2 + 1])
+
+
+@functools.lru_cache(maxsize=None)
+def _rslab_fft2_fn(mesh: Mesh, axis: str, data_axis: str | None = None):
+    """Jitted real slab forward: input real grids sharded over R ->
+    packed half-length FFT over C + Hermitian unpack (local) -> pad to
+    Cp = C/2 + D -> ONE all-to-all (split columns, gather R) -> local FFT
+    over R. Output is the PADDED (..., R, Cp) half spectrum sharded over
+    the column axis; callers slice the C/2+1 live bins."""
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[data_axis] if data_axis else 1
+
+    @jax.jit
+    def run(x):  # x: (..., R, C) real
+        shape = x.shape
+        rr, cc = shape[-2], shape[-1]
+        cp = cc // 2 + shards
+        z = x.reshape((-1, rr, cc))
+        b = z.shape[0]
+        bspec = data_axis if (data_axis and b % dsize == 0) else None
+
+        def body(zl):                                  # (b, R/D, C) real
+            hc = _rfft_cols(zl)                        # (b, R/D, C/2+1)
+            hc = jnp.pad(hc, ((0, 0), (0, 0), (0, shards - 1)))
+            hc = jax.lax.all_to_all(hc, axis, split_axis=2, concat_axis=1,
+                                    tiled=True)        # (b, R, Cp/D)
+            return _local_axis_fft(hc, 1, inverse=False)
+
+        out = shard_map(body, mesh=mesh, in_specs=P(bspec, axis, None),
+                        out_specs=P(bspec, None, axis),
+                        check_rep=False)(z)
+        return out.reshape(shape[:-2] + (rr, cp))
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _rslab_ifft2_fn(mesh: Mesh, axis: str, data_axis: str | None = None):
+    """Jitted real slab inverse, mirroring :func:`_rslab_fft2_fn`: padded
+    (..., R, Cp) half spectrum sharded over columns -> local IFFT over R ->
+    ONE all-to-all (split R, gather columns) -> slice the live bins ->
+    local Hermitian inverse over C -> (..., R, C) real sharded over R."""
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[data_axis] if data_axis else 1
+
+    @jax.jit
+    def run(y):  # y: (..., R, Cp) complex, Cp = C/2 + D
+        shape = y.shape
+        rr, cp = shape[-2], shape[-1]
+        half = cp - shards
+        cc = 2 * half
+        z = y.reshape((-1, rr, cp))
+        b = z.shape[0]
+        bspec = data_axis if (data_axis and b % dsize == 0) else None
+
+        def body(zl):                                  # (b, R, Cp/D)
+            zl = _local_axis_fft(zl, 1, inverse=True) / rr
+            zl = jax.lax.all_to_all(zl, axis, split_axis=1, concat_axis=2,
+                                    tiled=True)        # (b, R/D, Cp)
+            return _irfft_cols(zl[..., :half + 1])     # (b, R/D, C) real
+
+        out = shard_map(body, mesh=mesh, in_specs=P(bspec, None, axis),
+                        out_specs=P(bspec, axis, None),
+                        check_rep=False)(z)
+        return out.reshape(shape[:-2] + (rr, cc))
+
+    return run
+
+
+def distributed_rfft2(x: jax.Array, mesh: Mesh | None = None, *,
+                      axis: str = FFT_AXIS,
+                      data_axis: str | None = _AUTO) -> jax.Array:
+    """2-D real-input FFT over the last two axes -> (..., R, C/2+1) half
+    spectrum, distributed over ``mesh`` via the real slab pipeline (about
+    half the all-to-all bytes of :func:`distributed_fft2` on the same
+    grid — see :func:`collective_volume_nd` with ``real=True``).
+
+    Matches ``jnp.fft.rfft2``. Like the 1-D ``extensions.rfft``, sizes the
+    mesh cannot split (:func:`rslab_feasible`) fall back to the local
+    transform, which also covers odd grids via the direct DFT.
+    """
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError(f"rfft2 takes a real input, got {x.dtype}")
+    if x.ndim < 2:
+        raise ValueError(f"rfft2 needs a rank >= 2 input, got {x.shape}")
+    mesh = _resolve_mesh(mesh, axis)
+    tshape = (int(x.shape[-2]), int(x.shape[-1]))
+    if mesh is None or mesh.shape[axis] == 1 \
+            or not rslab_feasible(tshape, mesh.shape[axis]):
+        return _local_rfft2(x)
+    daxis = _resolve_data_axis(mesh, data_axis)
+    out = _rslab_fft2_fn(mesh, axis, daxis)(x)
+    return out[..., :tshape[-1] // 2 + 1]
+
+
+def distributed_irfft2(y: jax.Array, mesh: Mesh | None = None, *,
+                       axis: str = FFT_AXIS,
+                       data_axis: str | None = _AUTO) -> jax.Array:
+    """Inverse of :func:`distributed_rfft2`: (..., R, bins) half spectrum
+    -> (..., R, 2*(bins-1)) real grid. Matches ``jnp.fft.irfft2`` (even
+    output widths; infeasible sizes run locally)."""
+    y = jnp.asarray(y)
+    if y.ndim < 2:
+        raise ValueError(f"irfft2 needs a rank >= 2 spectrum, got {y.shape}")
+    if y.shape[-1] < 2:
+        raise ValueError("irfft2: a single-bin half spectrum has no "
+                         "default width (2*(bins-1) = 0) — the planned "
+                         "grid needs >= 2 bins")
+    y = y.astype(_complex_of(y.dtype))
+    half = y.shape[-1] - 1
+    cc = 2 * half
+    mesh = _resolve_mesh(mesh, axis)
+    tshape = (int(y.shape[-2]), cc)
+    if mesh is None or mesh.shape[axis] == 1 \
+            or not rslab_feasible(tshape, mesh.shape[axis]):
+        return _local_irfft2(y, cc=cc)
+    daxis = _resolve_data_axis(mesh, data_axis)
+    shards = mesh.shape[axis]
+    yp = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, shards - 1)])
+    return _rslab_ifft2_fn(mesh, axis, daxis)(yp)
+
+
+def _composed_rfft2(x: jax.Array, *, mesh: Mesh | None,
+                    axis: str = FFT_AXIS,
+                    data_axis: str | None = _AUTO) -> jax.Array:
+    """Pencil-path rfft2: a correctness-first composition — the 1-D
+    distributed rfft over the columns (half-length pencil pipeline plus
+    elementwise Hermitian unpack), then a natural-order C2C pass over the
+    rows. The slab is the optimized real path; this exists so explicit
+    ``decomp='pencil'`` real plans still scale the column transform."""
+    from . import api
+    from .extensions import rfft as _rfft_ext
+
+    y = _rfft_ext(x, mesh=mesh, axis=axis, data_axis=data_axis)
+    z = jnp.moveaxis(y, -2, -1)                        # (..., C/2+1, R)
+    if mesh is not None and mesh.shape[axis] > 1 \
+            and api._feasible_1d(z.shape[-1], mesh.shape[axis]):
+        p = api.plan(api.spec_for(z, mesh=mesh, axis=axis, data_axis=None))
+        z = p.fft(z)
+    else:
+        z = _local_axis_fft(z, -1, inverse=False)
+    return jnp.moveaxis(z, -1, -2)
+
+
+def _composed_irfft2(y: jax.Array, *, cc: int, mesh: Mesh | None,
+                     axis: str = FFT_AXIS,
+                     data_axis: str | None = _AUTO) -> jax.Array:
+    """Inverse of :func:`_composed_rfft2`: C2C inverse over the rows, then
+    the 1-D distributed irfft over the columns (length ``cc``)."""
+    from . import api
+    from .extensions import irfft as _irfft_ext
+
+    y = jnp.asarray(y)
+    y = y.astype(_complex_of(y.dtype))
+    z = jnp.moveaxis(y, -2, -1)                        # (..., bins, R)
+    if mesh is not None and mesh.shape[axis] > 1 \
+            and api._feasible_1d(z.shape[-1], mesh.shape[axis]):
+        p = api.plan(api.spec_for(z, mesh=mesh, axis=axis, data_axis=None))
+        z = p.ifft(z)
+    else:
+        z = _local_axis_fft(z, -1, inverse=True) / z.shape[-1]
+    z = jnp.moveaxis(z, -1, -2)
+    return _irfft_ext(z, n=cc, mesh=mesh, axis=axis, data_axis=data_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -759,6 +1040,203 @@ def ft_distributed_fft2(
 
 
 # ---------------------------------------------------------------------------
+# grouped two-side ABFT on the real slab pipeline
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _ft_rslab_fft2_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
+                      groups: int = 1, data_axis: str | None = None):
+    """The real slab forward (:func:`_rslab_fft2_fn`) with the grouped
+    two-side ABFT composed onto it, on the Hermitian-symmetric checksum
+    layout: the cs2/cs3 checksum grids are summed over the REAL input rows,
+    and because every map in the pipeline — even/odd pack, half-length C2C
+    FFT, Hermitian unpack (the conjugate-tail fold is R-linear), zero-pad,
+    transpose, row FFT — is R-linear with *real* group ids,
+    ``F(sum id_b x_b) = sum id_b F(x_b)`` holds elementwise on the padded
+    half spectrum and the shared decode (:func:`_grouped_verdict`) applies
+    unchanged with ``n = R * Cp``. The checksum grids ride the transpose
+    at the packed half width — half the checksum traffic of the C2C slab
+    ABFT, same relative 2G/B overhead. The pass-1 left checksum guards the
+    packed half-length FFT (``sum_k Z[k] = (C/2) * z[0]``)."""
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[data_axis] if data_axis else 1
+
+    @jax.jit
+    def run(x, inject):  # x: (B, R, C) real; inject: (F, 7) real
+        b, rr, cc = x.shape
+        half = cc // 2
+        cp = half + shards
+        g = groups
+        s = b // g
+        rc = rr * cp
+        bspec = data_axis if (
+            data_axis and b % dsize == 0 and g % dsize == 0) else None
+        dloc = dsize if bspec else 1
+        bl, gl = b // dloc, g // dloc
+        rl = rr // shards                    # local R rows in pass 1
+        ftype = np.float64 if x.dtype == jnp.float64 else np.float32
+        ctype = jnp.complex128 if x.dtype == jnp.float64 else jnp.complex64
+        ids = jnp.arange(1, s + 1, dtype=ftype)[None, :, None, None]
+
+        def body(zl):
+            d = jax.lax.axis_index(axis)
+            md = jax.lax.axis_index(data_axis) if bspec else jnp.int32(0)
+            # checksum grids summed over the REAL rows: [0, bl) data |
+            # [bl, bl+gl) cs2 | [bl+gl, bl+2gl) cs3
+            zg = zl.reshape((gl, s, rl, cc))
+            cs2_in = jnp.sum(zg, axis=1)
+            cs3_in = jnp.sum(ids * zg, axis=1)
+            zc = jnp.concatenate([zl, cs2_in, cs3_in], axis=0)
+            # ---- pass 1: packed half-length FFT over C + left checksum ----
+            zpk = (zc[..., 0::2] + 1j * zc[..., 1::2]).astype(ctype)
+            zf = _local_fft(zpk, False)
+            res1 = jnp.abs(jnp.sum(zf, axis=-1) - half * zpk[..., 0])
+            scale1 = jnp.sqrt(jnp.mean(jnp.abs(zpk) ** 2, axis=-1)) + EPS
+            delta = jnp.max(res1 / (float(np.sqrt(half)) * scale1))
+            hc = _unpack_half(zf, cc)                # (bl+2gl, rl, C/2+1)
+            hc = jnp.pad(hc, ((0, 0), (0, 0), (0, shards - 1)))
+            # ---- fault injection (tests/benchmarks): one SEU per row
+            # [fft_device, signal, local_r, col, enable, eps_re, eps_im]
+            # on the pass-1 HALF-SPECTRUM output (post-unpack): ``col``
+            # addresses the padded half spectrum [0, Cp) — live bins are
+            # [0, C/2+1) — and the checksum-row location encoding is the
+            # C2C layout's, at the folded width. -------------------------
+            dev = inject[:, 0].astype(jnp.int32)
+            sig = inject[:, 1].astype(jnp.int32)
+            row = inject[:, 2].astype(jnp.int32)
+            col = inject[:, 3].astype(jnp.int32)
+            eps = (inject[:, 5] + 1j * inject[:, 6]).astype(hc.dtype)
+            is_data = sig < b
+            is_cs2 = (sig >= b) & (sig < b + g)
+            gidx = jnp.where(is_cs2, sig - b, sig - b - g)
+            owner = jnp.where(is_data, sig // bl, gidx // gl)
+            lrow = jnp.where(
+                is_data, sig - owner * bl,
+                bl + jnp.where(is_cs2, 0, gl) + gidx - owner * gl)
+            amp = inject[:, 4] * ((owner == md) & (d == dev)).astype(ftype)
+            onehot = (
+                (jnp.arange(bl + 2 * gl)[None] == lrow[:, None])
+                [:, :, None, None]
+                * (jnp.arange(rl)[None] == row[:, None])[:, None, :, None]
+                * (jnp.arange(cp)[None] == col[:, None])[:, None, None, :])
+            hc = hc + jnp.sum((eps * amp.astype(hc.real.dtype))
+                              [:, None, None, None]
+                              * onehot.astype(hc.real.dtype), axis=0)
+            # ---- the one collective: the inter-axis transpose -------------
+            hc = jax.lax.all_to_all(hc, axis, split_axis=2, concat_axis=1,
+                                    tiled=True)      # (bl+2gl, R, Cp/D)
+            # ---- pass 2: FFT over R (resident) + left checksum ------------
+            zt = jnp.swapaxes(hc, -1, -2)
+            zf2 = _local_fft(zt, False)
+            res2 = jnp.abs(jnp.sum(zf2, axis=-1) - rr * zt[..., 0])
+            scale2 = jnp.sqrt(jnp.mean(jnp.abs(zt) ** 2, axis=-1)) + EPS
+            delta = jnp.maximum(
+                delta, jnp.max(res2 / (float(np.sqrt(rr)) * scale2)))
+            zf2 = jnp.swapaxes(zf2, -1, -2)          # (bl+2gl, R, Cp/D)
+            # ---- detect / locate per group --------------------------------
+            yl = zf2[:bl]
+            fcs2, fcs3 = zf2[bl:bl + gl], zf2[bl + gl:]
+            ylg = yl.reshape((gl, s) + yl.shape[1:])
+            cs2_out = jnp.sum(ylg, axis=1)
+            cs3_out = jnp.sum(ids * ylg, axis=1)
+            d2 = fcs2 - cs2_out                      # == -eps_y, sharded
+            d3 = fcs3 - cs3_out                      # == -id_s * eps_y
+            ylg, stats = _grouped_verdict(
+                ylg, d2, d3, cs2_out, axis=axis, threshold=threshold, s=s,
+                n=rc, md=md, bl=bl, gl=gl, correct=correct)
+            yl = ylg.reshape((bl,) + yl.shape[1:])
+            return yl, delta[None, None], stats[None]
+
+        yl, deltas, stats = shard_map(
+            body, mesh=mesh,
+            in_specs=P(bspec, axis, None),
+            out_specs=(P(bspec, None, axis), P(bspec, axis),
+                       P(axis, bspec, None)),
+            check_rep=False)(x)
+        st = stats[0]                # (G, 5); fft shards agree post-psum
+        flagged = st[:, 1] > 0.5
+        correctable = st[:, 3] > 0.5
+        return DistFFTResult(
+            y=yl, shard_delta=deltas.reshape((-1,)), group_score=st[:, 0],
+            flagged=flagged, location=st[:, 2].astype(jnp.int32),
+            correctable=correctable, checksum_fault=st[:, 4] > 0.5,
+            corrected=jnp.sum(correctable.astype(jnp.int32)) * int(correct),
+            recomputed=jnp.zeros((), jnp.int32))
+
+    return run
+
+
+def ft_distributed_rfft2(
+    x: jax.Array,
+    mesh: Mesh | None = None,
+    *,
+    axis: str = FFT_AXIS,
+    threshold: float = 1e-4,
+    correct: bool = True,
+    inject: jax.Array | None = None,
+    groups: int | None = None,
+    group_size: int | None = None,
+    data_axis: str | None = _AUTO,
+    recompute_uncorrectable: bool = False,
+) -> DistFFTResult:
+    """Fault-tolerant real slab 2-D forward FFT (grouped two-side ABFT on
+    the Hermitian half-spectrum layout).
+
+    :func:`ft_distributed_fft2` for REAL input grids: the checksum grids
+    are real input-row sums that fold through the packing trick alongside
+    the data (every pipeline map is R-linear, so the two-side decode is
+    exact on the padded half spectrum), ride the transpose at the packed
+    half width, and the verdict psum is unchanged. ``res.y`` carries the
+    C/2+1 live half-spectrum bins. ``inject`` rows are ``[fft_device,
+    signal, local_r, col, enable, eps_re, eps_im]`` — an SEU on the pass-1
+    half-spectrum output, ``col`` in the padded columns ``[0, C/2 + D)``
+    (live bins ``[0, C/2+1)``); ``signal`` in ``[B, B+G)`` / ``[B+G,
+    B+2G)`` targets a group's cs2 / cs3 checksum grid, as in the C2C
+    layout.
+    """
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError(
+            f"ft_distributed_rfft2 takes a real input, got {x.dtype} — "
+            f"use ft_distributed_fft2 for complex grids")
+    if x.ndim != 3:
+        raise ValueError(
+            f"ft_distributed_rfft2 expects (B, R, C), got {x.shape}")
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is None:
+        raise ValueError("ft_distributed_rfft2 requires a mesh with an "
+                         f"'{axis}' axis (see launch.mesh.make_fft_mesh)")
+    tshape = tuple(int(s) for s in x.shape[1:])
+    if not rslab_feasible(tshape, mesh.shape[axis]):
+        raise ValueError(
+            f"the real ft pipeline rides the slab transpose: needs a "
+            f"power-of-two grid with {mesh.shape[axis]} | {tshape[0]} and "
+            f"{mesh.shape[axis]} | {tshape[-1]}//2, got {tshape}")
+    daxis = _resolve_data_axis(mesh, data_axis)
+    dsize = mesh.shape[daxis] if daxis else 1
+    g = resolve_abft_groups(x.shape[0], groups=groups, group_size=group_size,
+                            data_shards=dsize)
+    ftype = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    x = x.astype(ftype)
+    if inject is None:
+        inject = jnp.zeros((1, 7), ftype)
+    inject = jnp.asarray(inject, ftype)
+    if inject.ndim == 1:
+        inject = inject[None]
+    res = _ft_rslab_fft2_fn(mesh, axis, float(threshold), bool(correct),
+                            g, daxis)(x, inject)
+    res = dataclasses.replace(res, y=res.y[..., :tshape[-1] // 2 + 1])
+    if recompute_uncorrectable:
+        res = _splice_recomputed(
+            x, res, g,
+            lambda rows: distributed_rfft2(rows, mesh, axis=axis,
+                                           data_axis=None),
+            "ft_distributed_rfft2")
+    return res
+
+
+# ---------------------------------------------------------------------------
 # 2-D spectral consumer: convolution via the slab round trip
 # ---------------------------------------------------------------------------
 
@@ -810,6 +1288,53 @@ def _conv2_pair_fn(mesh: Mesh, axis: str, data_axis: str | None):
     return run
 
 
+@functools.lru_cache(maxsize=None)
+def _rconv2_pair_fn(mesh: Mesh, axis: str, data_axis: str | None):
+    """Real-input :func:`_conv2_pair_fn`: both operands run the packed
+    half-spectrum forward stacked on the batch, the pointwise product
+    lives on the C/2+1 surviving bins (natural order — the Hermitian
+    logic stays inside the forward/inverse passes), and the mirrored
+    inverse brings back the real grid. Still exactly TWO all-to-alls and
+    ZERO all-gathers, at the padded half width ``Cp = C/2 + D`` — roughly
+    half the bytes of the complex round trip on the same grid."""
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[data_axis] if data_axis else 1
+
+    @jax.jit
+    def run(a, v):  # a: (B, R, C), v: (BK, R, C) real, BK in {1, B}
+        b = a.shape[0]
+        bk = v.shape[0]
+        rr = a.shape[1]
+        bspec = data_axis if (data_axis and b % dsize == 0) else None
+        vspec = bspec if bk == b else None
+
+        def body(al, vl):
+            ba = al.shape[0]
+            half = al.shape[-1] // 2
+            # ---- forward, both operands stacked: ONE all-to-all ----------
+            zc = jnp.concatenate([al, vl], axis=0)   # (BA+BK, R/D, C) real
+            hc = _rfft_cols(zc)                      # (BA+BK, R/D, C/2+1)
+            hc = jnp.pad(hc, ((0, 0), (0, 0), (0, shards - 1)))
+            hc = jax.lax.all_to_all(hc, axis, split_axis=2, concat_axis=1,
+                                    tiled=True)      # (BA+BK, R, Cp/D)
+            hc = _local_axis_fft(hc, 1, inverse=False)
+            # ---- pointwise on the half spectrum --------------------------
+            prod = hc[:ba] * hc[ba:]                 # BK==1 broadcasts
+            # ---- inverse: mirrored dataflow, ONE all-to-all --------------
+            prod = _local_axis_fft(prod, 1, inverse=True) / rr
+            prod = jax.lax.all_to_all(prod, axis, split_axis=1,
+                                      concat_axis=2, tiled=True)
+            return _irfft_cols(prod[..., :half + 1])  # (BA, R/D, C) real
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, axis, None), P(vspec, axis, None)),
+            out_specs=P(bspec, axis, None),
+            check_rep=False)(a, v)
+
+    return run
+
+
 def _crop2(full, sa: tuple[int, int], sv: tuple[int, int], mode: str):
     """numpy convolve mode cropping applied per transform axis."""
     from .spectral import _crop  # per-axis 1-D crop
@@ -833,8 +1358,12 @@ def fft_convolve2(a, v, mesh: Mesh | None = None, *, mode: str = "full",
     and zero all-gathers (kernel spectra ride the forward transpose
     stacked on the batch; the product comes back through the mirrored
     inverse) — modeled by :func:`collective_volume_nd` and asserted
-    against the HLO in ``benchmarks/fft_distributed.py``. Without a mesh
-    it runs the local transforms.
+    against the HLO in ``benchmarks/fft_distributed.py``. When BOTH
+    operands are real the round trip runs the packed half-spectrum
+    pipeline (:func:`_rconv2_pair_fn` — same two all-to-alls at roughly
+    half the bytes, ``collective_volume_nd(real=True)``) whenever the
+    padded grid is :func:`rslab_feasible`. Without a mesh it runs the
+    local transforms.
     """
     from .spectral import _next_pow2, _pad_tail, _result_dtypes
 
@@ -843,8 +1372,11 @@ def fft_convolve2(a, v, mesh: Mesh | None = None, *, mode: str = "full",
     if a.ndim < 2 or v.ndim < 2:
         raise ValueError("fft_convolve2 needs 2-D operands")
     cdtype, real = _result_dtypes(a, v)
-    a = a.astype(cdtype)
-    v = v.astype(cdtype)
+    rdtype = jnp.float64 if cdtype == jnp.dtype(jnp.complex128) \
+        else jnp.float32
+    # real operands stay real: the packing trick does the complex lift
+    a = a.astype(rdtype if real else cdtype)
+    v = v.astype(rdtype if real else cdtype)
     sa = (a.shape[-2], a.shape[-1])
     sv = (v.shape[-2], v.shape[-1])
     mesh = _resolve_mesh(mesh, axis)
@@ -858,9 +1390,16 @@ def fft_convolve2(a, v, mesh: Mesh | None = None, *, mode: str = "full",
     vp = _pad_tail(jnp.swapaxes(_pad_tail(v, nc), -1, -2), nr)
     vp = jnp.swapaxes(vp, -1, -2)
     if mesh is None or shards == 1:
-        full = _local_fftn(
-            _local_fftn(ap, 2, inverse=False)
-            * _local_fftn(vp, 2, inverse=False), 2, inverse=True)
+        if real and nc % 2 == 0:
+            fa = _local_axis_fft(_rfft_cols(ap), -2, inverse=False)
+            fv = _local_axis_fft(_rfft_cols(vp), -2, inverse=False)
+            full = _irfft_cols(
+                _local_axis_fft(fa * fv, -2, inverse=True) / nr)
+        else:
+            full = _local_fftn(
+                _local_fftn(ap.astype(cdtype), 2, inverse=False)
+                * _local_fftn(vp.astype(cdtype), 2, inverse=False),
+                2, inverse=True)
     else:
         daxis = _resolve_data_axis(mesh, data_axis)
         lead = ap.shape[:-2]
@@ -870,7 +1409,11 @@ def fft_convolve2(a, v, mesh: Mesh | None = None, *, mode: str = "full",
             raise ValueError(
                 f"kernel batch must be 1 or match the signal batch "
                 f"({a3.shape[0]}), got {v3.shape[0]}")
-        full = _conv2_pair_fn(mesh, axis, daxis)(a3, v3)
+        if real and rslab_feasible((nr, nc), shards):
+            full = _rconv2_pair_fn(mesh, axis, daxis)(a3, v3)
+        else:
+            full = _conv2_pair_fn(mesh, axis, daxis)(
+                a3.astype(cdtype), v3.astype(cdtype))
         full = full.reshape(lead + (nr, nc))
     out = _crop2(full[..., :sa[0] + sv[0] - 1, :sa[1] + sv[1] - 1],
                  sa, sv, mode)

@@ -18,6 +18,13 @@ exactly TWO all-to-all ops and ZERO all-gathers — verified against the
 post-partitioning HLO by benchmarks/fft_distributed.py and modeled by
 :func:`repro.core.fft.distributed.spectral_volume`.
 
+When BOTH operands are real the kernel does not even ride as stacked rows:
+it rides the *imaginary part* of one packed operand ``p = a + i*v``, since
+``p (.) p = a (.) a - v (.) v + 2i (a (.) v)`` makes the convolution the
+imaginary half of one self-product — the kernel's forward rows vanish from
+the collectives entirely (``spectral_volume(real=True)``). Correlation of
+real operands is the same trick on the circularly reversed kernel.
+
 On a 2-D batch x pencil mesh (``launch.mesh.make_fft_mesh(shards, data)``)
 batch rows shard over ``data`` while signal pencils shard over ``fft``; the
 collectives stay within the ``fft`` axis. Without a mesh every function
@@ -151,6 +158,72 @@ def _spectral_pair_fn(mesh: Mesh, axis: str, data_axis: str | None,
     return run
 
 
+@functools.lru_cache(maxsize=None)
+def _spectral_real_fn(mesh: Mesh, axis: str, data_axis: str | None):
+    """forward(p) -> p*p -> inverse for ONE packed operand ``p = a + i*v``.
+
+    Same transposed round trip as :func:`_spectral_pair_fn` but the kernel
+    rides the imaginary part instead of stacked batch rows, so the forward
+    all-to-all moves exactly the signal rows — no kernel payload at all.
+    The caller takes ``imag(.) / 2`` of the natural-order circular product.
+    """
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[data_axis] if data_axis else 1
+
+    @jax.jit
+    def run(p):  # p: (B, N) complex, a + i*v packed
+        b, n = p.shape
+        plan = make_dist_plan(n, shards, axis)
+        n1, n2 = plan.n1, plan.n2
+        tw_f = jnp.asarray(factors.stage_twiddle(n1, n2, inverse=False),
+                           dtype=p.dtype)
+        tw_i = jnp.asarray(factors.stage_twiddle(n1, n2, inverse=True),
+                           dtype=p.dtype)
+        zp = p.reshape((b, n1, n2))
+        bspec = data_axis if (data_axis and b % dsize == 0) else None
+        bloc = b // (dsize if bspec else 1)
+        if bloc % shards:
+            raise ValueError(
+                f"spectral pipeline needs batch divisible by "
+                f"{'data*shards' if bspec else 'shards'}, got {b} — "
+                f"fft_convolve/correlate pad the batch automatically")
+
+        def body(zl):
+            d = jax.lax.axis_index(axis)
+            n2l = zl.shape[-1]
+            # ---- forward: one packed operand, ONE all-to-all -------------
+            zl = jnp.swapaxes(zl, -1, -2)
+            zl = block_fft_stages(zl, inverse=False)     # FFT over n1
+            zl = jnp.swapaxes(zl, -1, -2)
+            twl = jax.lax.dynamic_slice_in_dim(tw_f, d * n2l, n2l, axis=1)
+            zl = zl * twl
+            zl = jax.lax.all_to_all(zl, axis, split_axis=1, concat_axis=2,
+                                    tiled=True)          # (B, n1/D, n2)
+            zl = _local_fft(zl, inverse=False)           # FFT over n2
+            # ---- pointwise self-product in transposed order --------------
+            prod = zl * zl                               # P[k]^2, any order
+            # ---- inverse from transposed order: batch-split a2a ----------
+            prod = _local_fft(prod, inverse=True)        # IFFT over k2
+            n1l = prod.shape[-2]
+            twi = jax.lax.dynamic_slice_in_dim(tw_i, d * n1l, n1l, axis=0)
+            prod = prod * twi
+            prod = jax.lax.all_to_all(prod, axis, split_axis=0, concat_axis=1,
+                                      tiled=True)        # (B/D, n1, n2)
+            prod = jnp.swapaxes(prod, -1, -2)
+            prod = _local_fft(prod, inverse=True)        # IFFT over k1
+            prod = jnp.swapaxes(prod, -1, -2)            # natural (n1, n2)
+            return prod.reshape(prod.shape[0], n) / n
+
+        out = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None, axis),),
+            out_specs=P((bspec, axis) if bspec else axis, None),
+            check_rep=False)(zp)
+        return out
+
+    return run
+
+
 def _pad_tail(x, n: int):
     """Zero-pad the last axis to length n."""
     pad = n - x.shape[-1]
@@ -166,8 +239,14 @@ def _spectral_pair(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
 
     Returns the length ``out_len`` head of the circular product's inverse
     (linear results need nfft >= la + lv - 1, which callers guarantee).
+    Two real operands take the packed single-transform path
+    (:func:`_spectral_real`); any complex operand takes the stacked pair.
     """
-    cdtype, _ = _result_dtypes(a, v)
+    cdtype, real = _result_dtypes(a, v)
+    if real:
+        return _spectral_real(a, v, mesh, axis, data_axis,
+                              conj_kernel=conj_kernel, out_len=out_len,
+                              cdtype=cdtype)
     a = jnp.asarray(a, cdtype)
     v = jnp.asarray(v, cdtype)
     mesh = _resolve_mesh(mesh, axis)
@@ -200,6 +279,41 @@ def _spectral_pair(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
     return out[..., :out_len].reshape(lead + (out_len,))
 
 
+def _spectral_real(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
+                   out_len: int, cdtype):
+    """Circular product of two REAL operands via ONE packed transform.
+
+    ``ifft(fft(a + i*v)^2) = a(.)a - v(.)v + 2i (a(.)v)``, so the circular
+    convolution is ``imag(.) / 2`` of one self-product. Correlation with a
+    real kernel is convolution with the circularly reversed kernel
+    ``w[k] = v[-k mod n]``, so the same path serves ``conj_kernel=True``
+    and the caller's roll/crop logic applies unchanged.
+    """
+    rdtype = jnp.float64 if cdtype == jnp.complex128 else jnp.float32
+    a = jnp.asarray(a, rdtype)
+    v = jnp.asarray(v, rdtype)
+    if conj_kernel:
+        v = jnp.concatenate([v[..., :1], v[..., 1:][..., ::-1]], axis=-1)
+    p = (a + 1j * v).astype(cdtype)      # kernel rides the imaginary part
+    mesh = _resolve_mesh(mesh, axis)
+    if mesh is None or mesh.shape[axis] == 1:
+        fp = _fft(p)
+        return (jnp.imag(_ifft(fp * fp)) * 0.5)[..., :out_len]
+    daxis = _resolve_data_axis(mesh, data_axis)
+    shards = mesh.shape[axis]
+    dsize = mesh.shape[daxis] if daxis else 1
+    lead = p.shape[:-1]
+    n = p.shape[-1]
+    p2d = p.reshape((-1, n))
+    b = p2d.shape[0]
+    p2d, _ = _pad_batch_rows(p2d, dsize, shards)
+    out = _spectral_real_fn(mesh, axis, daxis)(p2d)
+    if out.shape[0] != b:
+        out = out[:b]
+    out = jnp.imag(out) * 0.5
+    return out[..., :out_len].reshape(lead + (out_len,))
+
+
 def _conv_nfft(la: int, lv: int, mesh, axis: str) -> int:
     """FFT length for a linear result: power of two >= la + lv - 1, raised
     to the mesh's minimum pencil size (shards^2) when sharded."""
@@ -227,11 +341,11 @@ def conv_spec(a, v, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
 
     a = jnp.asarray(a)
     v = jnp.asarray(v)
-    cdtype, _ = _result_dtypes(a, v)
+    cdtype, real = _result_dtypes(a, v)
     nfft = _conv_nfft(a.shape[-1], v.shape[-1], mesh, axis)
     return api.FFTSpec(shape=a.shape[:-1] + (nfft,),
                        dtype=jnp.dtype(cdtype).name, rank=1, mesh=mesh,
-                       axis=axis, data_axis=data_axis)
+                       axis=axis, data_axis=data_axis, real=real)
 
 
 def fft_convolve(a, v, mesh: Mesh | None = None, *, mode: str = "full",
@@ -269,7 +383,8 @@ def correlate(a, v, mesh: Mesh | None = None, *, mode: str = "full",
 
 def power_spectrum(x, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
                    data_axis: str | None = _AUTO,
-                   natural_order: bool | None = None) -> jax.Array:
+                   natural_order: bool | None = None,
+                   real: bool = False) -> jax.Array:
     """Periodogram ``|X[k]|^2 / N`` along the last axis (real output).
 
     On the sharded path the bins stay in the transposed digit order by
@@ -278,12 +393,30 @@ def power_spectrum(x, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
     Order-agnostic consumers (total power, histograms, thresholds) never
     notice; pass ``natural_order=True`` to pay the redistribution and get
     numpy bin order. The local path is always natural order.
+
+    ``real=True`` (opt-in: it changes the output SHAPE) takes a real input
+    through the packed rfft and returns the one-sided ``N/2 + 1``-bin
+    spectrum ``|X[k]|^2 / N`` for ``k <= N/2`` — the half-length transform
+    moves about half the C2C path's bytes. One-sided bins are indexed by
+    ``k``, so this path is always natural order.
     """
     from . import api
 
     x = jnp.asarray(x)
     mesh_r = _resolve_mesh(mesh, axis)
     on_mesh = mesh_r is not None and mesh_r.shape[axis] > 1
+    if real:
+        if jnp.issubdtype(x.dtype, jnp.complexfloating):
+            raise ValueError(
+                f"power_spectrum(real=True) takes a real input, "
+                f"got {x.dtype}")
+        if natural_order is False:
+            raise ValueError(
+                "the one-sided real spectrum is natural-order only — the "
+                "Hermitian unpack indexes bins by k")
+        spec = api.spec_for(x, rank=1, mesh=mesh_r, axis=axis,
+                            data_axis=data_axis, real=True)
+        return api.plan(spec).power_spectrum(x)
     if natural_order is None:
         natural_order = not on_mesh
     dt = x.dtype if jnp.issubdtype(x.dtype, jnp.complexfloating) \

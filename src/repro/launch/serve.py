@@ -69,7 +69,7 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
                    group_size: int | None = None,
                    recompute_uncorrectable: bool = True,
                    natural_order: bool | None = None,
-                   dtype="complex64"):
+                   dtype="complex64", real: bool = False):
     """Resolve one serving request description into the
     :class:`~repro.core.fft.api.FFTSpec` its plan is built from.
 
@@ -82,8 +82,14 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
     transposed on a mesh (the digit restore is pure waste for ``|X|^2``),
     everything else is natural. The old serve flags are sugar over this
     builder — see ``--fft-spec``.
+
+    ``real=True`` (``--fft-spec "real=1"``) declares real-valued request
+    traffic: ``op="fft"`` serves the half-spectrum ``rfft``/``rfft2``
+    executors, ``op="spectrum"`` the one-sided periodogram, and
+    convolve/correlate ride the packed real pipelines — roughly half the
+    C2C collective bytes on a mesh. Real plans are natural-order only.
     """
-    from repro.core.fft import api, spectral
+    from repro.core.fft import api, multidim, spectral
 
     dims = dims if dims is not None else max(1, len(shape) - 1)
     if dims not in (1, 2):
@@ -97,6 +103,10 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
     if len(shape) != dims + 1:
         raise ValueError(f"dims={dims} expects a (batch, ...) shape with "
                          f"{dims} transform axes, got {tuple(shape)}")
+    if real and natural_order is False:
+        raise ValueError("real serve traffic is natural-order only — the "
+                         "half spectrum indexes bins by k (drop "
+                         "transposed=1 or real=1)")
     sharded = mesh is not None and "fft" in mesh.axis_names \
         and mesh.shape["fft"] > 1
     ft_cfg = None
@@ -118,15 +128,21 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
             nc = max(spectral._next_pow2(shape[-1] + kernel_shape[-1] - 1),
                      shards)
             shape = tuple(shape[:-2]) + (nr, nc)
-            decomp = "slab" if sharded else "auto"
+            if real and sharded \
+                    and not multidim.rslab_feasible((nr, nc), shards):
+                decomp = "auto"   # the composed real path covers the rest
+            else:
+                decomp = "slab" if sharded else "auto"
         natural_order = True
     elif natural_order is None:
-        # the per-op order default of the legacy endpoint
-        natural_order = not (sharded and op == "spectrum")
+        # the per-op order default of the legacy endpoint; real spectra
+        # are one-sided (bins indexed by k) and so always natural
+        natural_order = real or not (sharded and op == "spectrum")
     return api.FFTSpec(shape=tuple(int(s) for s in shape),
                        dtype=jnp.dtype(dtype).name, rank=dims, mesh=mesh,
                        axis="fft", decomp="auto" if dims == 1 else decomp,
-                       natural_order=bool(natural_order), ft=ft_cfg)
+                       natural_order=bool(natural_order), ft=ft_cfg,
+                       real=bool(real))
 
 
 def _ft_telemetry(plan, res, info):
@@ -163,6 +179,8 @@ def serve_plan(plan, x, *, op: str = "fft", kernel=None, mode: str = "same"):
     if plan.rank == 2:
         info["dims"] = 2
         info["decomp"] = plan.decomp
+    if plan.spec.real:
+        info["real"] = True
     transposed = (plan.sharded and not plan.spec.natural_order
                   and (plan.rank == 1 or plan.decomp == "pencil"))
     if op in ("convolve", "correlate"):
@@ -194,7 +212,7 @@ def serve_plan(plan, x, *, op: str = "fft", kernel=None, mode: str = "same"):
                 corrected=int(res.corrected))
             return res.y, info
         return res.y, _ft_telemetry(plan, res, info)
-    y = plan.fft(xs)
+    y = plan.rfft(xs) if plan.spec.real else plan.fft(xs)
     info.update(ft=False)
     if plan.sharded:
         info["order"] = "transposed" if transposed else "natural"
@@ -207,7 +225,7 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
               natural_order: bool | None = None,
               groups: int | None = None, group_size: int | None = None,
               recompute_uncorrectable: bool = True,
-              dims: int = 1, decomp: str = "auto"):
+              dims: int = 1, decomp: str = "auto", real: bool = False):
     """Batched sharded FFT endpoint: one request = one (B, N) batch
     (``dims=2``: one (B, R, C) grid batch).
 
@@ -237,14 +255,20 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
         raise ValueError(f"dims=2 expects (B, R, C) batches, got {x.shape}")
     mesh = make_fft_mesh(shards, data)
     kshape = jnp.asarray(kernel).shape if kernel is not None else None
-    dt = x.dtype if jnp.issubdtype(x.dtype, jnp.complexfloating) \
-        else jnp.complex64
+    if real and jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError(f"real=True serves real-valued traffic, "
+                         f"got {x.dtype}")
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        dt = x.dtype
+    else:
+        dt = jnp.complex128 if (real and x.dtype == jnp.float64) \
+            else jnp.complex64
     spec = build_fft_spec(
         x.shape, mesh=mesh, op=op, kernel_shape=kshape, dims=dims,
         decomp=decomp, ft=ft, threshold=threshold, groups=groups,
         group_size=group_size,
         recompute_uncorrectable=recompute_uncorrectable,
-        natural_order=natural_order, dtype=dt)
+        natural_order=natural_order, dtype=dt, real=real)
     return serve_plan(api.plan(spec), x, op=op, kernel=kernel, mode=mode)
 
 
@@ -257,6 +281,7 @@ _SPEC_KEYS = {
     "decomp": ("fft_decomp", str), "ft": ("ft", None),
     "groups": ("fft_groups", int), "kernel_n": ("fft_kernel_n", int),
     "transposed": ("transposed", None), "threshold": ("fft_threshold", float),
+    "real": ("fft_real", None),
 }
 
 
@@ -307,6 +332,8 @@ def _main_fft(args):
         kshape = ((args.fft_kernel_n, args.fft_kernel_n)
                   if args.fft_dims == 2 else (args.fft_kernel_n,))
         kernel = rng.standard_normal(kshape).astype(np.float32)
+    elif args.fft_real:
+        x = rng.standard_normal(shape).astype(np.float32)
     else:
         x = (rng.standard_normal(shape) +
              1j * rng.standard_normal(shape)).astype(np.complex64)
@@ -318,7 +345,8 @@ def _main_fft(args):
         kernel_shape=kernel.shape if kernel is not None else None,
         dims=args.fft_dims, decomp=args.fft_decomp, ft=args.ft,
         threshold=args.fft_threshold, groups=args.fft_groups,
-        natural_order=False if args.transposed else None)
+        natural_order=False if args.transposed else None,
+        real=args.fft_real)
     p = api.plan(spec)
     print(f"# {p}")
     call = lambda: serve_plan(p, x, op=args.fft_op, kernel=kernel)
@@ -330,7 +358,10 @@ def _main_fft(args):
     dt = (time.time() - t0) / args.fft_iters
     y = np.asarray(y)
     nfft = int(np.prod(shape[1:]))
-    fwd = np.fft.fft2 if args.fft_dims == 2 else np.fft.fft
+    if args.fft_real:
+        fwd = np.fft.rfft2 if args.fft_dims == 2 else np.fft.rfft
+    else:
+        fwd = np.fft.fft2 if args.fft_dims == 2 else np.fft.fft
     if args.fft_op == "convolve":
         if args.fft_dims == 2:
             rr = shape[1] + kshape[0] - 1
@@ -402,6 +433,11 @@ def main():
     ap.add_argument("--fft-iters", type=int, default=5)
     ap.add_argument("--transposed", action="store_true",
                     help="keep fft/spectrum output in transposed digit order")
+    ap.add_argument("--fft-real", action="store_true",
+                    help="serve real-valued traffic through the packed "
+                         "half-spectrum pipelines (rfft/rfft2, one-sided "
+                         "spectrum, packed convolve) — ~half the C2C "
+                         "collective bytes on a mesh")
     ap.add_argument("--ft", action="store_true",
                     help="run the sharded two-side ABFT online")
     args = ap.parse_args()

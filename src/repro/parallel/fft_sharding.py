@@ -19,7 +19,7 @@ from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan,
 __all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
            "shard_signals", "data_mesh_axis", "abft_group_layout",
            "abft_group_spec", "slab_specs", "pencil_nd_specs", "shard_grid",
-           "layout_specs"]
+           "layout_specs", "half_spectrum_shape"]
 
 
 def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
@@ -120,16 +120,38 @@ def pencil_nd_specs(ndim: int = 2, axis: str = FFT_AXIS,
             P(None, *lead, data_axis, None, axis, None))
 
 
+def half_spectrum_shape(shape: tuple[int, ...]) -> tuple[int, ...]:
+    """The Hermitian half-spectrum shape of a real grid: the last axis
+    folds to ``n//2 + 1`` bins (``rfft``/``rfft2`` output), every other
+    axis is unchanged."""
+    if not shape:
+        raise ValueError("half_spectrum_shape needs a non-empty shape")
+    return tuple(shape[:-1]) + (shape[-1] // 2 + 1,)
+
+
 def layout_specs(rank: int, decomp: str, *, axis: str = FFT_AXIS,
-                 data_axis: str | None = None) -> tuple[P, P]:
+                 data_axis: str | None = None, real: bool = False
+                 ) -> tuple[P, P]:
     """(input, output) PartitionSpecs of one planned transform's resident
     layouts — the single entry point ``core.fft.api.FFTPlan`` resolves its
     specs through. Rank 1 is always the pencil digit split
     (:func:`pencil_specs`); rank >= 2 dispatches on the resolved ``decomp``
     (:func:`slab_specs` / :func:`pencil_nd_specs`).
+
+    ``real=True`` (rank-2 slab only) describes the half-spectrum pipeline:
+    the AXIS placements are the C2C slab's (real rows in over ``axis``,
+    spectrum columns out over ``axis``), but the output array they apply to
+    is the :func:`half_spectrum_shape` of the input — only the ``C/2 + 1``
+    surviving column bins are resident.
     """
     if rank == 1:
         return pencil_specs(axis, data_axis)
+    if real:
+        if rank != 2 or decomp != "slab":
+            raise ValueError(
+                f"the real half-spectrum layout is the rank-2 slab "
+                f"(rfft2); got rank={rank}, decomp={decomp!r}")
+        return slab_specs(rank, axis, data_axis)
     if decomp == "slab":
         return slab_specs(rank, axis, data_axis)
     if decomp == "pencil":

@@ -168,3 +168,63 @@ def test_ft_ifft_detects_and_corrects(rng):
     assert int(res.corrected) == 1
     np.testing.assert_allclose(np.asarray(res.y), want,
                                atol=1e-4 * np.abs(want).max())
+
+
+# ---------------------------------------------------------------------------
+# edge-case regressions: degenerate sizes + fp64 precision
+# ---------------------------------------------------------------------------
+
+
+def test_rfft_odd_n_matches_numpy(rng):
+    """Odd lengths have no power-of-two plan; the documented fallback is
+    the direct DFT (regression: a bare power-of-two assert used to make
+    every odd length an AssertionError)."""
+    x = rng.standard_normal((2, 511)).astype(np.float32)
+    got = np.asarray(rfft(jnp.asarray(x)))
+    want = np.fft.rfft(x)
+    np.testing.assert_allclose(got, want, atol=2e-4 * np.abs(want).max())
+
+
+def test_rfft_irfft_degenerate_sizes_raise_valueerror(rng):
+    with pytest.raises(ValueError, match="empty"):
+        rfft(jnp.zeros((2, 0), jnp.float32))
+    with pytest.raises(ValueError, match="empty"):
+        irfft(jnp.zeros((2, 0), jnp.complex64))
+    # a single-bin half spectrum has no default width (2*(bins-1) = 0)
+    with pytest.raises(ValueError, match="single-bin"):
+        irfft(jnp.ones((2, 1), jnp.complex64))
+    with pytest.raises(ValueError, match="n"):
+        irfft(jnp.ones((2, 5), jnp.complex64), n=0)
+
+
+def test_irfft_n1_explicit(rng):
+    """n=1 with an explicit length is well-defined: the DC bin's real
+    part (numpy semantics)."""
+    y = jnp.asarray([[3.5 + 2.0j], [-1.25 + 0.5j]], jnp.complex64)
+    got = np.asarray(irfft(y, n=1))
+    np.testing.assert_allclose(got, np.fft.irfft(np.asarray(y), 1),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("fn_pair", ["fft2", "ft_ifft"])
+def test_fp64_not_clobbered(fn_pair, rng):
+    """complex128 operands keep full precision end-to-end (regression:
+    float64 intermediates used to silently clobber to float32, capping
+    fp64 accuracy at the fp32 noise floor)."""
+    x = (rng.standard_normal((4, 32, 64)) +
+         1j * rng.standard_normal((4, 32, 64))).astype(np.complex128)
+    if fn_pair == "fft2":
+        y = fft2(jnp.asarray(x))
+        assert np.asarray(y).dtype == np.complex128
+        want = np.fft.fft2(x)
+        assert np.abs(np.asarray(y) - want).max() < 1e-11 * np.abs(want).max()
+        back = ifft2(y)
+        assert np.asarray(back).dtype == np.complex128
+        assert np.abs(np.asarray(back) - x).max() < 1e-11 * np.abs(x).max()
+    else:
+        xs = x.reshape(8, 1024)[:, :256]
+        res = ft_ifft(jnp.asarray(xs), transactions=2, bs=8)
+        want = np.fft.ifft(xs)
+        assert np.asarray(res.y).dtype == np.complex128
+        assert np.abs(np.asarray(res.y) - want).max() \
+            < 1e-11 * np.abs(want).max()
