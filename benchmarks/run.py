@@ -34,6 +34,9 @@ def main() -> None:
     from . import abft_overhead
     abft_overhead.run(smoke=smoke)
 
+    from . import ft_gemm_overhead
+    ft_gemm_overhead.run(smoke=smoke)
+
     from . import error_injection
     error_injection.run(smoke=smoke)
 

@@ -34,6 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import plan as planbase
+from repro.core.plan import FTConfig
+
 from . import multidim
 from .distributed import (_AUTO, FFT_AXIS, _resolve_data_axis, _resolve_mesh,
                           collective_volume, distributed_fft,
@@ -69,26 +72,10 @@ def warn_deprecated_kwargs(entry: str, names) -> None:
         FFTKwargDeprecationWarning, stacklevel=3)
 
 
-@dataclasses.dataclass(frozen=True)
-class FTConfig:
-    """Fault-tolerance configuration folded into an :class:`FFTSpec`.
-
-    Mesh-path knobs (grouped two-side ABFT): ``threshold`` / ``correct`` /
-    ``groups`` / ``group_size`` / ``recompute_uncorrectable`` — the former
-    ``FTPolicy.mesh_kwargs()`` pile. Local fused-kernel knobs:
-    ``transactions`` / ``per_signal`` / ``encoding``. A plan uses whichever
-    set its dispatch path needs, so ONE config describes the ft transform
-    on any mesh (including none).
-    """
-
-    threshold: float = 1e-4
-    correct: bool = True
-    groups: int | None = None
-    group_size: int | None = None
-    recompute_uncorrectable: bool = False
-    transactions: int = 4
-    per_signal: bool = False
-    encoding: str = "wang"
+# FTConfig now lives in the op-agnostic plan layer (repro.core.plan): the
+# same config object describes the checked variant of any plan family —
+# this FFT instantiation and the GEMM plans in repro.core.gemm. Re-exported
+# here (and from repro.core.fft) for compatibility.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,8 +225,10 @@ def _feasible_1d(n: int, shards: int) -> bool:
             and not (shards & (shards - 1)) and n >= shards * shards)
 
 
-class FFTPlan:
-    """Pre-resolved executor bundle for one :class:`FFTSpec`.
+@planbase.register_plan_type(FFTSpec)
+class FFTPlan(planbase.Plan):
+    """Pre-resolved executor bundle for one :class:`FFTSpec` — the FFT
+    instantiation of the op-agnostic plan layer (:mod:`repro.core.plan`).
 
     The constructor does every per-call resolution the legacy kwarg paths
     repeated — mesh/axis validation, decomposition choice, ABFT group
@@ -250,7 +239,7 @@ class FFTPlan:
     """
 
     def __init__(self, spec: FFTSpec):
-        self.spec = spec
+        super().__init__(spec)
         self.rank = spec.rank
         self.tshape = spec.tshape
         self.batch = spec.batch
@@ -785,25 +774,18 @@ class FFTPlan:
                 f"natural_order={s.natural_order}, ft={s.ft is not None})")
 
 
-@functools.lru_cache(maxsize=512)
-def _plan_cached(spec: FFTSpec) -> FFTPlan:
-    return FFTPlan(spec)
-
-
 def plan(spec: FFTSpec) -> FFTPlan:
-    """Build (or fetch from the LRU cache) the :class:`FFTPlan` for
-    ``spec``. Equal specs return the SAME plan object, whose executors are
-    bound to already-traced pipelines — the cuFFT ``plan once, exec hot``
-    contract for serve traffic."""
+    """Build (or fetch from the shared plan-layer LRU cache) the
+    :class:`FFTPlan` for ``spec``. Equal specs return the SAME plan object,
+    whose executors are bound to already-traced pipelines — the cuFFT
+    ``plan once, exec hot`` contract for serve traffic."""
     if not isinstance(spec, FFTSpec):
         raise TypeError(f"plan() takes an FFTSpec, got "
                         f"{type(spec).__name__}")
-    return _plan_cached(spec)
+    return planbase.plan(spec)
 
 
-def plan_cache_info():
-    return _plan_cached.cache_info()
-
-
-def plan_cache_clear():
-    _plan_cached.cache_clear()
+# the plan cache is shared across plan families (repro.core.plan); these
+# aliases keep the historical FFT-side spelling working
+plan_cache_info = planbase.plan_cache_info
+plan_cache_clear = planbase.plan_cache_clear

@@ -100,6 +100,19 @@ class FaultSchedule:
                                    dtype=jnp.float32)
         return jnp.asarray([0, 0, 0, 0, 0.0, 0.0], dtype=jnp.float32)
 
+    def for_step_gemm(self, step: int) -> jax.Array:
+        """(1, 5) GEMM fault descriptor ``[site, row, col, enable, eps]``
+        for ``step`` (disabled if none) — the ``tile`` field addresses the
+        protected-matmul *site* within a block and ``eps_re`` is the real
+        perturbation (GEMM activations are real). Feed to
+        ``Model.decode_step(inject=...)`` / ``FTContext``.
+        """
+        for (s, tile, row, col, er, _ei) in self.entries:
+            if s == step:
+                return jnp.asarray([[tile, row, col, 1, er]],
+                                   dtype=jnp.float32)
+        return jnp.zeros((1, 5), dtype=jnp.float32)
+
     @property
     def num_faults(self) -> int:
         return len(self.entries)

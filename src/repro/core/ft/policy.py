@@ -40,6 +40,10 @@ class FTPolicy:
     keep_checkpoints: int = 3
     # numerical guards for training
     skip_nonfinite_updates: bool = True
+    # checked-GEMM backend for protected linears ("auto" resolves to the
+    # fused Pallas kernel on TPU when tile-aligned, plain-XLA otherwise —
+    # see core.gemm.GEMMSpec)
+    gemm_backend: str = "auto"
 
     def kernel_kwargs(self) -> dict:
         return dict(transactions=self.transactions,
@@ -48,12 +52,13 @@ class FTPolicy:
                     threshold=self.threshold)
 
     def to_ft_config(self):
-        """The :class:`~repro.core.fft.api.FTConfig` this policy implies —
-        attach it to an ``FFTSpec`` (``FFTSpec(ft=policy.to_ft_config())``)
-        and the plan runs the grouped mesh ABFT / fused-kernel pipeline
-        with the policy's knobs. Replaces the old ``mesh_kwargs()`` pile.
+        """The op-agnostic :class:`~repro.core.plan.FTConfig` this policy
+        implies — attach it to ANY plan spec (``FFTSpec(ft=...)`` for the
+        grouped mesh / fused-kernel FFT ABFT, ``GEMMSpec(ft=...)`` for the
+        two-side checked matmul) and the plan runs with the policy's knobs.
+        One policy, every checked operator family.
         """
-        from repro.core.fft.api import FTConfig
+        from repro.core.plan import FTConfig
 
         return FTConfig(
             threshold=self.threshold,

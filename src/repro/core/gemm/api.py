@@ -1,0 +1,210 @@
+"""GEMM plan family on the shared op-agnostic plan layer (``core.plan``).
+
+The paper's ABFT is derived from the GEMV view of the DFT — the same
+two-side checksum scheme protects any ``Y = X @ W``. This module is the
+plan/execute front door for checked GEMMs, mirroring ``core.fft.api``:
+
+* :class:`GEMMSpec` — frozen, hashable description of one matmul workload
+  ``(M, K, N)`` plus an optional :class:`~repro.core.plan.FTConfig`;
+* :class:`GEMMPlan` — resolved once per spec (registered on the shared
+  registry, cached by the shared LRU): picks the ABFT backend and binds
+  ``matmul`` / ``ft_matmul`` executors;
+* backends: ``"xla"`` is the interpreter-path two-side ABFT
+  (:mod:`repro.core.abft.gemm` — plain XLA ops, the right default off-TPU),
+  ``"pallas"`` the fused kernel (:mod:`repro.kernels.ft_matmul`) whose
+  checksum strips are decoded by the SAME :func:`decode_columns`, so the
+  two backends agree by construction. ``"auto"`` resolves to the fused
+  kernel on TPU when the dims are tile-aligned, the XLA path otherwise.
+
+Injection descriptors are ``(4,)`` (or ``(F, 4)``) float rows
+``[row, col, enable, eps]`` — ``enable`` makes the descriptor jit-safe: a
+disabled fault is an all-zeros add, so serving can thread one traced array
+through a fixed program and flip faults on per step
+(:meth:`repro.core.ft.injection.FaultSchedule.for_step_gemm`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as planbase
+from repro.core.plan import FTConfig
+from repro.core.abft import gemm as abft_gemm
+from repro.core.abft.encoding import EPS
+from repro.kernels.ft_matmul import ft_matmul_pallas
+
+__all__ = ["GEMMSpec", "GEMMPlan", "spec_for", "plan"]
+
+_BACKENDS = ("auto", "xla", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMMSpec:
+    """Frozen, hashable description of one ``(M, K) @ (K, N)`` workload.
+
+    ``shape`` is ``(M, K, N)`` with M the token axis the checksums ride
+    (batched ``(B, T, K)`` activations flatten to ``M = B * T`` — use
+    :func:`spec_for`). ``ft`` attaches the shared :class:`FTConfig`;
+    ``backend`` picks the ABFT implementation (see module docstring);
+    ``tiles`` are the fused kernel's ``(bm, bk, bn)`` block sizes. Equal
+    specs hash equal and hit the same cached :class:`GEMMPlan`.
+    """
+
+    shape: tuple[int, int, int]
+    dtype: str = "float32"
+    ft: FTConfig | None = None
+    backend: str = "auto"
+    tiles: tuple[int, int, int] = (128, 128, 128)
+
+    def __post_init__(self):
+        shape = tuple(int(s) for s in self.shape)
+        if len(shape) != 3 or any(s <= 0 for s in shape):
+            raise ValueError(f"GEMMSpec.shape must be (M, K, N) positive "
+                             f"sizes, got {self.shape!r}")
+        object.__setattr__(self, "shape", shape)
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"GEMMSpec.backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        tiles = tuple(int(t) for t in self.tiles)
+        if len(tiles) != 3 or any(t <= 0 for t in tiles):
+            raise ValueError(f"GEMMSpec.tiles must be (bm, bk, bn) positive "
+                             f"sizes, got {self.tiles!r}")
+        object.__setattr__(self, "tiles", tiles)
+        if self.ft is not None and not isinstance(self.ft, FTConfig):
+            raise TypeError(f"GEMMSpec.ft must be an FTConfig or None, "
+                            f"got {type(self.ft).__name__}")
+
+
+def _tile_aligned(shape, tiles) -> bool:
+    (m, k, n), (bm, bk, bn) = shape, tiles
+    return m % bm == 0 and k % bk == 0 and n % bn == 0
+
+
+@planbase.register_plan_type(GEMMSpec)
+class GEMMPlan(planbase.Plan):
+    """Resolved executor bundle for one :class:`GEMMSpec`.
+
+    ``backend`` is the resolved ABFT implementation; :meth:`matmul` is the
+    unchecked product, :meth:`ft_matmul` the checked one (requires
+    ``spec.ft``). ``volume`` is the analytic flop model — the checked
+    product's overhead is four rank-1 GEMVs, independent of M·N.
+    """
+
+    def __init__(self, spec: GEMMSpec):
+        super().__init__(spec)
+        m, k, n = spec.shape
+        backend = spec.backend
+        aligned = _tile_aligned(spec.shape, spec.tiles)
+        if backend == "auto":
+            backend = ("pallas"
+                       if aligned and jax.default_backend() == "tpu"
+                       else "xla")
+        if backend == "pallas" and not aligned:
+            raise ValueError(
+                f"GEMMSpec(backend='pallas') needs tile-aligned dims: "
+                f"shape={spec.shape} vs tiles={spec.tiles} — use "
+                f"backend='xla' (or 'auto', which falls back)")
+        self.backend = backend
+        self.volume = {"flops": 2 * m * k * n}
+        if spec.ft is not None:
+            # e2/e3 input GEMVs (4mk) + predicted strips (4kn) + output
+            # strips (3mn) + per-column decode (O(n))
+            self.volume["checksum_flops"] = 4 * m * k + 4 * k * n + 3 * m * n
+
+    def describe(self) -> dict:
+        d = super().describe()
+        m, k, n = self.spec.shape
+        d.update(m=m, k=k, n=n, backend=self.backend,
+                 dtype=self.spec.dtype, tiles=self.spec.tiles)
+        return d
+
+    # -- executors ---------------------------------------------------------
+    def matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """Unchecked ``x @ w`` (the baseline the overhead is measured
+        against)."""
+        self._check_operands(x, w)
+        return jnp.matmul(x, w)
+
+    def ft_matmul(self, x: jax.Array, w: jax.Array, *,
+                  inject: jax.Array | None = None):
+        """Checked ``x @ w`` -> ``(y, stats)`` (see
+        :func:`repro.core.abft.gemm.decode_columns` for the stats contract).
+
+        ``inject`` is a ``(4,)``/``(F, 4)`` ``[row, col, enable, eps]``
+        descriptor; rows index the flattened token axis.
+        """
+        cfg = self.spec.ft
+        if cfg is None:
+            raise ValueError("ft_matmul on a plan without an FTConfig — "
+                             "build the GEMMSpec with ft=FTConfig(...)")
+        self._check_operands(x, w)
+        inj = _normalize_inject(inject)
+        if self.backend == "pallas":
+            bm, bk, bn = self.spec.tiles
+            return _ft_matmul_fused(
+                x, w, inj, bm=bm, bn=bn, bk=bk,
+                threshold=cfg.threshold, with_correction=cfg.correct)
+        # xla: fold enable into eps -> the interpreter path's (F, 3) rows
+        inj3 = jnp.stack([inj[:, 0], inj[:, 1], inj[:, 2] * inj[:, 3]],
+                         axis=-1)
+        return abft_gemm.ft_matmul(x, w, threshold=cfg.threshold,
+                                   with_correction=cfg.correct, inject=inj3)
+
+    __call__ = matmul
+
+    def _check_operands(self, x, w):
+        m, k, n = self.spec.shape
+        got = (int(math.prod(x.shape[:-1])), int(x.shape[-1]),
+               int(w.shape[-1]))
+        if w.ndim != 2 or int(w.shape[0]) != k or got != (m, k, n):
+            raise ValueError(f"operands {tuple(x.shape)} @ {tuple(w.shape)} "
+                             f"do not match GEMMSpec.shape (M, K, N)="
+                             f"{(m, k, n)}")
+
+
+def _normalize_inject(inject) -> jax.Array:
+    """``None`` / ``(4,)`` / ``(F, 4)`` -> ``(F, 4)`` float32 (a disabled
+    all-zeros row when None, so one jit trace serves both cases)."""
+    if inject is None:
+        return jnp.zeros((1, 4), jnp.float32)
+    return jnp.reshape(jnp.asarray(inject, jnp.float32), (-1, 4))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "threshold",
+                              "with_correction"))
+def _ft_matmul_fused(x, w, inj, *, bm, bn, bk, threshold, with_correction):
+    x2 = x.reshape(-1, x.shape[-1])
+    t = x2.shape[0]
+    res = ft_matmul_pallas(x2, w, bm=bm, bn=bn, bk=bk, inject=inj)
+    d2 = res.pred2 - res.out2
+    d3 = res.pred3 - res.out3
+    scale = jnp.sqrt(jnp.mean(res.out2 * res.out2)) + EPS
+    y, stats = abft_gemm.decode_columns(
+        res.c, d2, d3, scale, t=t, threshold=threshold,
+        with_correction=with_correction)
+    return y.reshape(x.shape[:-1] + (w.shape[-1],)).astype(x.dtype), stats
+
+
+def spec_for(x: jax.Array, w: jax.Array, *, ft: FTConfig | None = None,
+             backend: str = "auto",
+             tiles: tuple[int, int, int] = (128, 128, 128)) -> GEMMSpec:
+    """Build the :class:`GEMMSpec` describing ``x @ w`` (flattening batched
+    activation leading axes into M)."""
+    m = int(math.prod(x.shape[:-1]))
+    return GEMMSpec(shape=(m, int(x.shape[-1]), int(w.shape[-1])),
+                    dtype=jnp.dtype(x.dtype).name, ft=ft, backend=backend,
+                    tiles=tiles)
+
+
+def plan(spec: GEMMSpec) -> GEMMPlan:
+    """Shared-cache lookup (see :func:`repro.core.plan.plan`)."""
+    if not isinstance(spec, GEMMSpec):
+        raise TypeError(f"core.gemm.plan() takes a GEMMSpec, got "
+                        f"{type(spec).__name__}")
+    return planbase.plan(spec)

@@ -1,0 +1,133 @@
+"""Op-agnostic fault-tolerance plan layer: one frozen spec -> one cached
+:class:`Plan` executor bundle, for ANY checked operator family.
+
+TurboFFT's ABFT is derived from the GEMV view of the DFT (paper §2.2.2) —
+the checksum/locate/correct machinery is a property of a *linear operator*,
+not of the FFT. This module is the spec->plan->executor skeleton shared by
+every kernel family that wants it:
+
+* the spec is a frozen, hashable value object describing one workload
+  (shape, dtype, layout, fault-tolerance knobs). Equal specs hash equal and
+  hit the same cached plan;
+* :func:`plan` resolves a spec ONCE into a :class:`Plan` subclass registered
+  for its type (``core.fft.api.FFTSpec -> FFTPlan``, ``core.gemm.GEMMSpec ->
+  GEMMPlan``) whose constructor does every per-call decision up front and
+  binds executors to already-built jitted pipelines;
+* :class:`FTConfig` is the shared fault-tolerance attachment — one config
+  object (built from ``core.ft.FTPolicy.to_ft_config()``) describes the
+  checked variant of any plan, so the SAME policy drives the FFT mesh ABFT
+  and the GEMM two-side ABFT.
+
+This module is deliberately free of FFT- and GEMM-specific imports: operator
+families register themselves via :func:`register_plan_type` at import time
+and only pay for what they use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+__all__ = ["FTConfig", "Plan", "plan", "register_plan_type",
+           "plan_cache_info", "plan_cache_clear"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FTConfig:
+    """Fault-tolerance configuration folded into a plan spec.
+
+    Shared knobs: ``threshold`` (detection delta) and ``correct`` (online
+    correction vs detect-only). Mesh-path knobs (grouped two-side FFT ABFT):
+    ``groups`` / ``group_size`` / ``recompute_uncorrectable``. Local
+    fused-kernel knobs: ``transactions`` / ``per_signal`` / ``encoding``.
+    A plan uses whichever subset its dispatch path needs, so ONE config
+    describes the checked variant of any operator family (FFT on any mesh,
+    GEMM on any backend).
+    """
+
+    threshold: float = 1e-4
+    correct: bool = True
+    groups: int | None = None
+    group_size: int | None = None
+    recompute_uncorrectable: bool = False
+    transactions: int = 4
+    per_signal: bool = False
+    encoding: str = "wang"
+
+
+class Plan:
+    """Base class for pre-resolved executor bundles.
+
+    Subclasses resolve everything in ``__init__(spec)`` — layout, kernel
+    choice, checksum geometry, the analytic cost model — and bind executors
+    as bound methods, so execution is a straight dispatch. Two hooks are
+    part of the shared contract:
+
+    * ``volume`` — an analytic cost/traffic model of one execution
+      (``None`` when the family has no model for the resolved path);
+    * :meth:`describe` — a flat dict of the resolved plan parameters, for
+      telemetry and benchmark tables.
+
+    Construct via :func:`plan` (LRU-cached on the spec), not directly.
+    """
+
+    volume = None
+
+    def __init__(self, spec):
+        self.spec = spec
+
+    def describe(self) -> dict:
+        d = {"plan": type(self).__name__,
+             "spec": type(self.spec).__name__,
+             "ft": getattr(self.spec, "ft", None) is not None}
+        if self.volume is not None:
+            d["volume"] = self.volume
+        return d
+
+
+_PLAN_TYPES: dict[type, type[Plan]] = {}
+
+
+def register_plan_type(spec_cls: type, plan_cls: type[Plan] | None = None):
+    """Register ``plan_cls`` as the :class:`Plan` for ``spec_cls``.
+
+    Usable as a decorator on the plan class::
+
+        @register_plan_type(GEMMSpec)
+        class GEMMPlan(Plan): ...
+    """
+    if plan_cls is None:
+        def deco(cls):
+            register_plan_type(spec_cls, cls)
+            return cls
+        return deco
+    if not (isinstance(plan_cls, type) and issubclass(plan_cls, Plan)):
+        raise TypeError(f"register_plan_type needs a Plan subclass, "
+                        f"got {plan_cls!r}")
+    _PLAN_TYPES[spec_cls] = plan_cls
+    return plan_cls
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_cached(spec) -> Plan:
+    return _PLAN_TYPES[type(spec)](spec)
+
+
+def plan(spec) -> Plan:
+    """Build (or fetch from the shared LRU cache) the :class:`Plan` for
+    ``spec``. Equal specs return the SAME plan object whose executors are
+    bound to already-traced pipelines — the cuFFT ``plan once, exec hot``
+    contract, for every registered operator family."""
+    if type(spec) not in _PLAN_TYPES:
+        known = ", ".join(c.__name__ for c in _PLAN_TYPES) or "none imported"
+        raise TypeError(
+            f"plan() takes a registered plan spec ({known}), got "
+            f"{type(spec).__name__}")
+    return _plan_cached(spec)
+
+
+def plan_cache_info():
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear():
+    _plan_cached.cache_clear()

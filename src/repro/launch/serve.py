@@ -42,24 +42,50 @@ from repro.train import make_serve_step
 
 
 def decode(model: Model, params, prompts: jax.Array, gen: int,
-           max_len: int | None = None):
-    """Prefill via repeated decode steps, then generate ``gen`` tokens."""
+           max_len: int | None = None, schedule=None):
+    """Prefill via repeated decode steps, then generate ``gen`` tokens.
+
+    ``schedule`` is an optional :class:`~repro.core.ft.FaultSchedule`: each
+    host-loop step arms its GEMM fault descriptor
+    (:meth:`~repro.core.ft.FaultSchedule.for_step_gemm`) into the jitted
+    step — the descriptor is a traced array of fixed shape, so the armed
+    and clean steps share ONE compiled program. Returns ``(tokens,
+    FTStats)`` when a schedule is given (online ABFT telemetry summed over
+    steps), else just ``tokens``.
+    """
+    from repro.core.ft import FTStats
+
     cfg = model.cfg
     b, p = prompts.shape
     max_len = max_len or (p + gen)
     run = RunConfig(model=cfg)
     step_fn = jax.jit(make_serve_step(model, run))
     cache = model.init_cache(batch=b, max_len=max_len)
+    stats = FTStats.zeros()
+
+    def inj(step):
+        return None if schedule is None else schedule.for_step_gemm(step)
+
+    def fold(aux):
+        return stats.merge(FTStats(
+            detected=aux["ft_flagged"], corrected=aux["ft_corrected"],
+            max_score=aux["ft_max_score"],
+            skipped_updates=jnp.zeros((), jnp.float32)))
+
     # teacher-forced prefill (decode-path; exercises the cache end-to-end)
     nxt = prompts[:, :1]
     for i in range(p):
         tok = prompts[:, i:i + 1]
-        nxt, cache, _ = step_fn(params, cache, tok, jnp.int32(i))
+        nxt, cache, aux = step_fn(params, cache, tok, jnp.int32(i), inj(i))
+        stats = fold(aux)
     out = [nxt]
     for j in range(gen - 1):
-        nxt, cache, _ = step_fn(params, cache, nxt, jnp.int32(p + j))
+        nxt, cache, aux = step_fn(params, cache, nxt, jnp.int32(p + j),
+                                  inj(p + j))
+        stats = fold(aux)
         out.append(nxt)
-    return jnp.concatenate(out, axis=1)
+    toks = jnp.concatenate(out, axis=1)
+    return toks if schedule is None else (toks, stats)
 
 
 def build_fft_spec(shape, *, mesh=None, op: str = "fft",
@@ -439,7 +465,14 @@ def main():
                          "spectrum, packed convolve) — ~half the C2C "
                          "collective bytes on a mesh")
     ap.add_argument("--ft", action="store_true",
-                    help="run the sharded two-side ABFT online")
+                    help="FFT mode: run the sharded two-side ABFT online. "
+                         "LM mode: protect every linear with the checked "
+                         "GEMM plan (core.gemm) and inject a demo "
+                         "FaultSchedule of SEUs that the decode must "
+                         "detect and correct online")
+    ap.add_argument("--ft-threshold", type=float, default=1e-3,
+                    help="LM-mode ABFT detection threshold (relative "
+                         "per-column checksum divergence)")
     args = ap.parse_args()
 
     if args.mode == "fft":
@@ -448,6 +481,20 @@ def main():
 
     cfg = (get_config if args.preset == "full" else get_smoke_config)(
         args.arch)
+    schedule = None
+    if args.ft:
+        import dataclasses as _dc
+
+        from repro.core.ft import FaultSchedule
+
+        cfg = _dc.replace(cfg, ft=_dc.replace(
+            cfg.ft, protect_linears=True, threshold=args.ft_threshold))
+        # two SEUs the online ABFT must catch: one mid-prefill, one
+        # mid-generation — (step, site, row<batch, col, eps_re, eps_im)
+        schedule = FaultSchedule(entries=(
+            (min(2, args.prompt_len - 1), 0, args.batch - 1, 3, 275.0, 0.0),
+            (args.prompt_len + 1, 1, 0, 11, -310.0, 0.0),
+        ))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -455,10 +502,17 @@ def main():
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
     t0 = time.time()
-    toks = decode(model, params, prompts, args.gen)
+    res = decode(model, params, prompts, args.gen, schedule=schedule)
+    toks, stats = res if args.ft else (res, None)
     dt = time.time() - t0
     rate = args.batch * args.gen / dt
     print(f"generated {toks.shape} in {dt:.2f}s ({rate:.1f} tok/s)")
+    if stats is not None:
+        print(f"ft: injected={schedule.num_faults} "
+              f"detected={float(stats.detected):.0f} "
+              f"corrected={float(stats.corrected):.0f} "
+              f"max_score={float(stats.max_score):.3f} "
+              f"backend={cfg.ft.gemm_backend}")
     print(np.asarray(toks[:, :16]))
 
 

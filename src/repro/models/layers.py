@@ -3,8 +3,9 @@ embeddings, RoPE. Pure-functional: params are nested dicts of jax arrays.
 
 Every dense contraction routes through :func:`dense`, which consults the
 model's FT policy — when ``protect_linears`` is on, the product is computed
-through the paper's two-sided ABFT (``core.abft.ft_matmul``) so compute SEUs
-in any projection are detected and corrected online.
+through the paper's two-sided ABFT via the cached GEMM plan layer
+(``core.gemm``) so compute SEUs in any projection are detected and
+corrected online.
 """
 from __future__ import annotations
 
@@ -15,7 +16,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import abft
 from repro.core.ft import FTPolicy
 
 __all__ = ["truncated_normal", "rmsnorm", "layernorm", "make_norm_params",
@@ -53,27 +53,70 @@ def dense_init(key, shape, dtype=jnp.float32, contract_dims: int = 1):
 @dataclasses.dataclass
 class FTContext:
     """Mutable-during-trace accumulator for ABFT stats (functionally pure:
-    entries are traced arrays collected during apply and summed by caller)."""
+    entries are traced arrays collected during apply and summed by caller).
+
+    Each protected matmul routes through :meth:`matmul` — the shared GEMM
+    plan layer (``core.gemm``) built from this context's policy. ``inject``
+    optionally carries a traced fault descriptor ``(5,)`` / ``(F, 5)`` rows
+    ``[site, row, col, enable, eps]``: every protected matmul takes the next
+    *site* number (trace order) and arms only descriptors whose site
+    matches, so one fixed program can fault any layer. Under scanned layer
+    super-blocks the trace runs once per block, so a site addresses that
+    position in EVERY scanned block.
+    """
 
     policy: FTPolicy
     flagged: list = dataclasses.field(default_factory=list)
+    corrected: list = dataclasses.field(default_factory=list)
     scores: list = dataclasses.field(default_factory=list)
+    inject: jax.Array | None = None
+    sites: int = 0
 
     @property
     def enabled(self) -> bool:
         return self.policy is not None and self.policy.protect_linears
 
+    def take_inject(self) -> jax.Array | None:
+        """Next site's ``(F, 4)`` ``[row, col, enable, eps]`` descriptor
+        (``None`` when no schedule is armed). Advances the site counter."""
+        site = self.sites
+        self.sites += 1
+        if self.inject is None:
+            return None
+        d = jnp.atleast_2d(jnp.asarray(self.inject, jnp.float32))
+        enable = d[:, 3] * (d[:, 0] == site).astype(jnp.float32)
+        return jnp.stack([d[:, 1], d[:, 2], enable, d[:, 4]], axis=-1)
+
+    def matmul(self, x2: jax.Array, w: jax.Array) -> jax.Array:
+        """Checked ``x2 @ w`` through the cached GEMM plan; records stats."""
+        from repro.core import gemm  # local: keep layers importable alone
+
+        spec = gemm.spec_for(x2, w, ft=self.policy.to_ft_config(),
+                             backend=self.policy.gemm_backend)
+        y, stats = gemm.plan(spec).ft_matmul(x2, w,
+                                             inject=self.take_inject())
+        self.record(stats)
+        return y
+
     def record(self, stats: dict):
         self.flagged.append(stats["flagged"])
+        self.corrected.append(stats.get("corrected",
+                                        jnp.zeros((), jnp.float32)))
         self.scores.append(stats["score"])
 
     def summary(self) -> dict:
         if not self.flagged:
             z = jnp.zeros((), jnp.float32)
-            return {"ft_flagged": z, "ft_max_score": z}
+            return {"ft_flagged": z, "ft_corrected": z, "ft_max_score": z}
+        # entries may mix scalars with per-expert (e,) vectors — reduce each
+        # before stacking
         return {
-            "ft_flagged": jnp.sum(jnp.stack(self.flagged)),
-            "ft_max_score": jnp.max(jnp.stack(self.scores)),
+            "ft_flagged": jnp.sum(jnp.stack(
+                [jnp.sum(f) for f in self.flagged])),
+            "ft_corrected": jnp.sum(jnp.stack(
+                [jnp.sum(c) for c in self.corrected])),
+            "ft_max_score": jnp.max(jnp.stack(
+                [jnp.max(s) for s in self.scores])),
         }
 
 
@@ -125,13 +168,13 @@ def make_dense_params(key, d_in, d_out, *, bias=False,
 
 
 def dense(params, x, *, ft: FTContext | None = None):
-    """y = x @ w (+ b), optionally through two-sided ABFT (paper's scheme)."""
+    """y = x @ w (+ b), optionally through two-sided ABFT (paper's scheme)
+    via the shared GEMM plan layer (``core.gemm``)."""
     w = params["w"]
     if ft is not None and ft.enabled and x.ndim >= 2 and w.ndim == 2:
         lead = x.shape[:-1]
         x2 = x.reshape((-1, x.shape[-1]))
-        y2, stats = abft.ft_matmul(x2, w, threshold=ft.policy.threshold)
-        ft.record(stats)
+        y2 = ft.matmul(x2, w)
         y = y2.reshape(lead + (w.shape[-1],))
     else:
         y = jnp.einsum("...k,kd->...d", x, w.astype(x.dtype))

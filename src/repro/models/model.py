@@ -33,13 +33,15 @@ def _dt(name: str):
 
 def _tree_zeros_aux():
     z = jnp.zeros((), jnp.float32)
-    return {"moe_aux": z, "ft_flagged": z, "ft_max_score": z}
+    return {"moe_aux": z, "ft_flagged": z, "ft_corrected": z,
+            "ft_max_score": z}
 
 
 def _merge_aux(a, b):
     return {
         "moe_aux": a["moe_aux"] + b["moe_aux"],
         "ft_flagged": a["ft_flagged"] + b["ft_flagged"],
+        "ft_corrected": a["ft_corrected"] + b["ft_corrected"],
         "ft_max_score": jnp.maximum(a["ft_max_score"], b["ft_max_score"]),
     }
 
@@ -126,8 +128,12 @@ class Model:
 
     # --------------------------------------------------------------- forward
     def apply(self, params, batch: dict, *, block_q: int = 1024,
-              remat: bool = False):
-        """Full-sequence forward. Returns (logits_f32, aux)."""
+              remat: bool = False, inject=None):
+        """Full-sequence forward. Returns (logits_f32, aux).
+
+        ``inject`` threads a traced GEMM fault descriptor into every
+        protected block (see ``transformer.block_apply``).
+        """
         cfg = self.cfg
         adt = _dt(cfg.dtype)
         if cfg.is_encdec:
@@ -136,7 +142,7 @@ class Model:
         from repro.parallel.sharding import constrain_hidden
         x = constrain_hidden(x)
         x, aux = self._run_groups(params["stack"], x, positions, block_q,
-                                  remat)
+                                  remat, inject=inject)
         return self._head(params, x), aux
 
     def _embed_inputs(self, params, batch, adt):
@@ -164,7 +170,7 @@ class Model:
         return constrain_logits(logits)
 
     def _run_groups(self, stack, x, positions, block_q, remat,
-                    caches=None, cache_pos=None):
+                    caches=None, cache_pos=None, inject=None):
         cfg = self.cfg
         g = layer_groups(cfg)
         ftp = cfg.ft
@@ -174,7 +180,8 @@ class Model:
         def run_one(p, x, kind, cache):
             fn = functools.partial(
                 block_apply, cfg=cfg, kind=kind, positions=positions,
-                cache_pos=cache_pos, block_q=block_q, ftp=ftp)
+                cache_pos=cache_pos, block_q=block_q, ftp=ftp,
+                inject=inject)
             if remat and remat != "none" and cache is None:
                 # per-block remat on the unrolled path (matches the scanned
                 # path, which remats the whole super-block body)
@@ -235,6 +242,7 @@ class Model:
                 lambda v: jnp.sum(v) if v.ndim else v,
                 {"moe_aux": a_scan["moe_aux"],
                  "ft_flagged": a_scan["ft_flagged"],
+                 "ft_corrected": a_scan["ft_corrected"],
                  "ft_max_score": jnp.max(a_scan["ft_max_score"])}))
 
         if g.tail:
@@ -335,8 +343,13 @@ class Model:
                 for i, kind in enumerate(g.tail)}
         return caches
 
-    def decode_step(self, params, cache, tokens, pos, *, block_q: int = 0):
-        """One decode step. tokens: (B, 1); pos: scalar int32 write index."""
+    def decode_step(self, params, cache, tokens, pos, *, block_q: int = 0,
+                    inject=None):
+        """One decode step. tokens: (B, 1); pos: scalar int32 write index.
+
+        ``inject`` threads a traced GEMM fault descriptor into every
+        protected block (serving arms it per step from a FaultSchedule).
+        """
         cfg = self.cfg
         adt = _dt(cfg.dtype)
         positions = pos + jnp.arange(tokens.shape[1])
@@ -358,7 +371,7 @@ class Model:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), adt)
         x, aux, new_caches = self._run_groups(
             params["stack"], x, positions, block_q, False, caches=cache,
-            cache_pos=pos)
+            cache_pos=pos, inject=inject)
         return self._head(params, x), new_caches, aux
 
 

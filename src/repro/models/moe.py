@@ -18,17 +18,41 @@ Shared experts (deepseek) run densely on every token.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core import abft
+
 from . import layers
 from .layers import dense_init
 
 __all__ = ["make_moe_params", "moe_block", "moe_block_ep",
            "aux_load_balance_loss"]
+
+
+def _ft_expert_matmul(buf, w, threshold, correct):
+    """Per-expert checked GEMMs: vmap the two-side ABFT matmul over the
+    expert axis. buf: (e, c, d) @ w: (e, d, f) -> ((e, c, f), stats with
+    (e,) leaves). Batched weights are per-expert plans, so this rides the
+    XLA interpreter path directly (the fused kernel takes one weight)."""
+    return jax.vmap(lambda b2, w2: abft.ft_matmul(
+        b2, w2, threshold=threshold, with_correction=correct))(buf, w)
+
+
+def _merge_expert_stats(*stats_dicts):
+    """Sum the count leaves / max the score across the three expert GEMMs
+    (leaves stay (e,) vectors; FTContext.summary reduces them)."""
+    out = {}
+    for k in stats_dicts[0]:
+        vals = [s[k] for s in stats_dicts]
+        out[k] = (functools.reduce(jnp.maximum, vals) if k == "score"
+                  else sum(vals))
+    return out
 
 
 def make_moe_params(key, cfg, dtype=jnp.float32):
@@ -47,12 +71,16 @@ def make_moe_params(key, cfg, dtype=jnp.float32):
 
 
 def _dispatch_compute(xf, gate_vals, gate_idx, wg, wu, wo, cap, e, *,
-                      dtype):
+                      dtype, ft_args=None):
     """Sort-based capacity dispatch + expert FFN + combine (local arrays).
 
     xf: (T, d); gate_idx/vals: (T, k); wg/wu: (e, d, f); wo: (e, f, d).
     Expert ids in gate_idx are in [0, e) (caller rebases for EP shards;
     out-of-range ids are dropped by the capacity mask).
+
+    ``ft_args = (threshold, correct)`` routes the three expert GEMMs
+    through the two-side ABFT; returns ``(y, stats)`` with stats ``None``
+    when unprotected.
     """
     t, d = xf.shape
     k = gate_idx.shape[-1]
@@ -71,17 +99,26 @@ def _dispatch_compute(xf, gate_vals, gate_idx, wg, wu, wo, cap, e, *,
     buf = buf.at[dest].set(xf.astype(dtype)[src_token], mode="drop")
     buf = buf[:-1].reshape(e, cap, d)
 
-    gate = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dtype))
-    up = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dtype))
-    act = jax.nn.silu(gate) * up
-    out_buf = jnp.einsum("ecf,efd->ecd", act, wo.astype(dtype))
+    if ft_args is not None:
+        threshold, correct = ft_args
+        gate, s1 = _ft_expert_matmul(buf, wg, threshold, correct)
+        up, s2 = _ft_expert_matmul(buf, wu, threshold, correct)
+        act = jax.nn.silu(gate) * up
+        out_buf, s3 = _ft_expert_matmul(act, wo, threshold, correct)
+        stats = _merge_expert_stats(s1, s2, s3)
+    else:
+        gate = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dtype))
+        up = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dtype))
+        act = jax.nn.silu(gate) * up
+        out_buf = jnp.einsum("ecf,efd->ecd", act, wo.astype(dtype))
+        stats = None
 
     out_flat = out_buf.reshape(e * cap, d)
     gathered = jnp.where(keep[:, None],
                          out_flat[jnp.clip(dest, 0, e * cap - 1)], 0.0)
     unsort = jnp.argsort(order)
     contrib = gathered[unsort].reshape(t, k, d)
-    return jnp.einsum("tkd,tk->td", contrib, gate_vals.astype(dtype))
+    return jnp.einsum("tkd,tk->td", contrib, gate_vals.astype(dtype)), stats
 
 
 def moe_block_ep(params, x, cfg, mesh, *, ft=None):
@@ -105,6 +142,12 @@ def moe_block_ep(params, x, cfg, mesh, *, ft=None):
     tokens_local = max(b // max(dp_size, 1), 1) * t
     cap = max(int(np.ceil(tokens_local * k / e * cfg.capacity_factor)), 8)
 
+    # traced arrays cannot escape the shard_map closure via FTContext.record
+    # — when protected, the local stats come back as extra psum'd outputs
+    # (only then, so the unprotected path's collective count is unchanged)
+    ft_on = ft is not None and ft.enabled
+    ft_args = ((ft.policy.threshold, True) if ft_on else None)
+
     def local_fn(xb, router_w, wg, wu, wo):
         # xb: (B_loc, T, d) — replicated over model; wg: (e_local, d, f)
         bl = xb.shape[0]
@@ -118,23 +161,35 @@ def moe_block_ep(params, x, cfg, mesh, *, ft=None):
         local_idx = gate_idx - m_idx * e_local
         local_idx = jnp.where((local_idx >= 0) & (local_idx < e_local),
                               local_idx, e_local)  # -> drop bucket
-        y = _dispatch_compute(xf, gate_vals, local_idx, wg, wu, wo,
-                              cap, e_local, dtype=x.dtype)
+        y, stats = _dispatch_compute(xf, gate_vals, local_idx, wg, wu, wo,
+                                     cap, e_local, dtype=x.dtype,
+                                     ft_args=ft_args)
         y = jax.lax.psum(y, "model")  # combine expert shards
         aux = aux_load_balance_loss(probs, gate_idx, e)
         if dp:
             aux = jax.lax.pmean(aux, dp)  # global mean over token shards
-        return y.reshape(bl, t, d), aux
+        if stats is None:
+            return y.reshape(bl, t, d), aux
+        axes = ("model",) + dp  # replicate stats across every shard
+        return (y.reshape(bl, t, d), aux,
+                jax.lax.psum(jnp.sum(stats["flagged"]), axes),
+                jax.lax.psum(jnp.sum(stats["corrected"]), axes),
+                jax.lax.pmax(jnp.max(stats["score"]), axes))
 
     in_specs = (P(dp if dp else None, None, None),   # x: batch over dp
                 P(None, None),                        # router replicated
                 P("model", None, None), P("model", None, None),
                 P("model", None, None))
     out_specs = (P(dp if dp else None, None, None), P())
+    if ft_on:
+        out_specs = out_specs + (P(), P(), P())
     fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
-    y, aux = fn(x, params["router"], params["wi_gate"], params["wi_up"],
-                params["wo"])
+    out = fn(x, params["router"], params["wi_gate"], params["wi_up"],
+             params["wo"])
+    y, aux = out[0], out[1]
+    if ft_on:
+        ft.record({"flagged": out[2], "corrected": out[3], "score": out[4]})
     if "shared" in params:
         y = y + layers.swiglu(params["shared"], x.reshape(b * t, d),
                               ft=ft).reshape(b, t, d)
@@ -197,11 +252,20 @@ def _moe_block_portable(params, x, cfg, *, ft=None):
     buf = constrain_moe_buffer(buf)
 
     # ---- expert FFN (EP: the leading E axis is sharded over `tensor`) ------
-    gate = jnp.einsum("ecd,edf->ecf", buf,
-                      params["wi_gate"].astype(x.dtype))
-    up = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(x.dtype))
-    act = jax.nn.silu(gate) * up
-    out_buf = jnp.einsum("ecf,efd->ecd", act, params["wo"].astype(x.dtype))
+    if ft is not None and ft.enabled:
+        thr = ft.policy.threshold
+        gate, s1 = _ft_expert_matmul(buf, params["wi_gate"], thr, True)
+        up, s2 = _ft_expert_matmul(buf, params["wi_up"], thr, True)
+        act = jax.nn.silu(gate) * up
+        out_buf, s3 = _ft_expert_matmul(act, params["wo"], thr, True)
+        ft.record(_merge_expert_stats(s1, s2, s3))
+    else:
+        gate = jnp.einsum("ecd,edf->ecf", buf,
+                          params["wi_gate"].astype(x.dtype))
+        up = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(x.dtype))
+        act = jax.nn.silu(gate) * up
+        out_buf = jnp.einsum("ecf,efd->ecd", act,
+                             params["wo"].astype(x.dtype))
 
     # ---- combine ------------------------------------------------------------
     out_flat = out_buf.reshape(e * cap, d)

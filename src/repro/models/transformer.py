@@ -135,10 +135,17 @@ def _ffn_dff(cfg, kind):
 
 
 def block_apply(params, x, *, cfg, kind: str, positions=None, cache=None,
-                cache_pos=None, block_q=1024, ftp=None):
-    """One transformer block. Returns (y, new_cache, aux_dict)."""
+                cache_pos=None, block_q=1024, ftp=None, inject=None):
+    """One transformer block. Returns (y, new_cache, aux_dict).
+
+    ``inject`` is an optional traced fault descriptor ``(F, 5)``
+    ``[site, row, col, enable, eps]`` armed against this block's protected
+    matmuls (site = matmul index within the block, trace order) — see
+    :class:`FTContext`.
+    """
     base, ffn = kind.split("|")
-    ft = FTContext(ftp) if (ftp is not None and ftp.protect_linears) else None
+    ft = (FTContext(ftp, inject=inject)
+          if (ftp is not None and ftp.protect_linears) else None)
     aux = {"moe_aux": jnp.zeros((), jnp.float32)}
 
     h = layers.norm(params["norm1"], x, cfg.norm, cfg.norm_eps)
@@ -180,6 +187,7 @@ def block_apply(params, x, *, cfg, kind: str, positions=None, cache=None,
         aux.update(ft.summary())
     else:
         aux.update({"ft_flagged": jnp.zeros((), jnp.float32),
+                    "ft_corrected": jnp.zeros((), jnp.float32),
                     "ft_max_score": jnp.zeros((), jnp.float32)})
     return x, new_cache, aux
 

@@ -87,6 +87,7 @@ def make_train_step(model: Model, run: RunConfig) -> Callable:
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             zaux = {"moe_aux": jnp.zeros((), jnp.float32),
                     "ft_flagged": jnp.zeros((), jnp.float32),
+                    "ft_corrected": jnp.zeros((), jnp.float32),
                     "ft_max_score": jnp.zeros((), jnp.float32)}
             (grads, total, ce, aux), _ = jax.lax.scan(
                 acc, (zeros_g, jnp.zeros(()), jnp.zeros(()), zaux), mb)
@@ -103,6 +104,7 @@ def make_train_step(model: Model, run: RunConfig) -> Callable:
             "skipped_updates": info["skipped"],
             "moe_aux": aux["moe_aux"],
             "ft_flagged": aux["ft_flagged"],
+            "ft_corrected": aux["ft_corrected"],
             "ft_max_score": aux["ft_max_score"],
         }
         return params, opt_state, metrics
@@ -124,9 +126,9 @@ def make_serve_step(model: Model, run: RunConfig, *,
     """One batched decode step: (params, cache, tokens, pos) ->
     (next_tokens, cache, aux)."""
 
-    def serve_step(params, cache, tokens, pos):
+    def serve_step(params, cache, tokens, pos, inject=None):
         logits, cache, aux = model.decode_step(params, cache, tokens, pos,
-                                               block_q=0)
+                                               block_q=0, inject=inject)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt[:, None], cache, aux
 

@@ -169,30 +169,44 @@ def test_ft_matmul_kernel_sweep(m, k, n):
     rng = np.random.default_rng(m + k + n)
     x = rng.standard_normal((m, k)).astype(np.float32)
     w = rng.standard_normal((k, n)).astype(np.float32)
-    c, colck, pred = ft_matmul_pallas(jnp.asarray(x), jnp.asarray(w))
+    res = ft_matmul_pallas(jnp.asarray(x), jnp.asarray(w))
     want = x @ w
-    np.testing.assert_allclose(np.asarray(c), want,
+    np.testing.assert_allclose(np.asarray(res.c), want,
                                atol=2e-4 * np.abs(want).max())
-    # fused output checksum == true column sums; prediction agrees (clean)
-    np.testing.assert_allclose(np.asarray(colck), want.sum(0),
+    # fused output checksums == true column sums / location sums;
+    # predictions agree on a clean run
+    np.testing.assert_allclose(np.asarray(res.out2), want.sum(0),
                                atol=1e-2 * np.abs(want.sum(0)).max())
-    rel = np.abs(np.asarray(colck) - np.asarray(pred)).max() / (
-        np.abs(np.asarray(pred)).max() + 1e-9)
-    assert rel < 1e-4
+    loc = np.arange(1, m + 1, dtype=np.float64)
+    want3 = loc @ want.astype(np.float64)
+    np.testing.assert_allclose(np.asarray(res.out3), want3,
+                               rtol=0, atol=1e-4 * np.abs(want3).max())
+    for out, pred in ((res.out2, res.pred2), (res.out3, res.pred3)):
+        rel = np.abs(np.asarray(out) - np.asarray(pred)).max() / (
+            np.abs(np.asarray(pred)).max() + 1e-9)
+        assert rel < 1e-4
 
 
-def test_ft_matmul_kernel_detects_injected_error():
-    """Corrupt one C tile after the kernel: colck (computed from the true
-    product inside the kernel) now disagrees with a recomputed column sum —
-    while the in-kernel pred/colck pair stays consistent, demonstrating the
-    detection contract colck vs pred on the *computed* outputs."""
+def test_ft_matmul_kernel_in_kernel_injection_locates():
+    """An in-kernel SEU diverges out2 vs pred2 at the hit column AND the
+    location ratio d3/d2 decodes to row + 1 — the two-side contract the
+    plan-layer decode (core.abft.gemm.decode_columns) relies on."""
     rng = np.random.default_rng(5)
-    x = rng.standard_normal((128, 128)).astype(np.float32)
+    x = rng.standard_normal((256, 128)).astype(np.float32)
     w = rng.standard_normal((128, 128)).astype(np.float32)
-    c, colck, pred = ft_matmul_pallas(jnp.asarray(x), jnp.asarray(w))
-    c_bad = np.asarray(c).copy()
-    c_bad[7, 13] += 1000.0
-    post_sum = c_bad.sum(0)
-    div = np.abs(post_sum - np.asarray(pred))
-    assert div[13] > 100.0  # corrupted column flagged
+    row, col, eps = 201, 13, 1000.0
+    res = ft_matmul_pallas(jnp.asarray(x), jnp.asarray(w),
+                           inject=jnp.array([row, col, 1.0, eps]))
+    want = x @ w
+    assert abs(np.asarray(res.c)[row, col] - want[row, col] - eps) < 1e-2
+    d2 = np.asarray(res.pred2) - np.asarray(res.out2)
+    d3 = np.asarray(res.pred3) - np.asarray(res.out3)
+    div = np.abs(d2)
+    assert div[col] > 100.0  # corrupted column flagged
     assert np.median(div) < 1.0
+    assert abs(d3[col] / d2[col] - (row + 1)) < 0.05  # location decodes
+
+
+def test_ft_matmul_kernel_rejects_unaligned():
+    with pytest.raises(ValueError, match="tile-aligned"):
+        ft_matmul_pallas(jnp.zeros((100, 128)), jnp.zeros((128, 128)))
