@@ -25,6 +25,13 @@ fp32 and fp64), pencil == two all-to-alls (zero gathers transposed, the
 modeled digit-restore gathers natural), and the fused 2-D convolution ==
 two all-to-alls — all hard-asserted against ``collective_volume_nd``.
 
+``run_overlap`` pins down the chunked multi-transaction pipelines: for each
+chunk count C the 1-D, grouped-ABFT, and spectral pipelines must lower to
+exactly C (resp. 2C) all-to-alls with unchanged total volume, the measured
+exposed-communication fraction (largest single all-to-all / total) must
+equal the model's ``1/C``, and every chunked output must be bitwise
+identical to the bulk pipeline.
+
 Standalone runs force a multi-device host platform:
 
     PYTHONPATH=src python -m benchmarks.fft_distributed
@@ -157,8 +164,9 @@ def run(smoke: bool = True):
             got = m.get("total_bytes", 0.0)
             want = mdl["hlo_bytes"]
             agree = got / want if want else float("nan")
-            # hard model==HLO check (0.1% slack covers the HLO parser
-            # counting the psum's async start/done tuple twice — O(100B))
+            # hard model==HLO check, pure relative tolerance: the parser
+            # dedupes async start/done tuples and the model carries the
+            # replicated-stats broadcast, so there is no absolute slack
             assert want and abs(agree - 1.0) < 1e-3, (tag, got, want)
             emit(f"distfft_N2^{ln}_b{b}_wire_{tag}", got,
                  f"model={want:.0f}B;hlo/model={agree:.3f};"
@@ -379,11 +387,12 @@ def run_plan_reuse(smoke: bool = True):
         model = p.volume
         assert model == dist.collective_volume(n, b, shards)
         got, want = meas["total_bytes"], model["hlo_bytes"]
-        assert want and abs(got - want) <= max(want * 1e-3, 512), (got, want)
-        # ft plan: same contract, grouped verdict traffic included (the
-        # absolute 512B floor covers the parser double-counting the psum's
-        # async start/done tuple, which the relative slack only absorbs on
-        # MB-scale cells)
+        assert want and abs(got / want - 1.0) < 1e-3, (got, want)
+        # ft plan: same contract, grouped verdict traffic included. Pure
+        # relative tolerance — the parser dedupes async start/done tuples
+        # (keeping the result half) and the model includes the replicated
+        # per-group stats broadcast, so no absolute byte floor is needed
+        # even on these KB-scale dispatch cells
         g = 4
         pf = plan(FFTSpec(shape=(b, n), mesh=mesh, ft=FTConfig(groups=g)))
         from repro.core.fft.distributed import _ft_dist_fft_fn
@@ -391,12 +400,118 @@ def run_plan_reuse(smoke: bool = True):
             _ft_dist_fft_fn(mesh, "fft", 1e-4, True, True, g, None), x,
             jnp.zeros((1, 7), jnp.float32))
         want_ft = pf.volume["hlo_bytes"]
-        assert abs(meas_ft["total_bytes"] - want_ft) <= \
-            max(want_ft * 1e-3, 512), (meas_ft["total_bytes"], want_ft)
+        assert want_ft and \
+            abs(meas_ft["total_bytes"] / want_ft - 1.0) < 1e-3, \
+            (meas_ft["total_bytes"], want_ft)
         emit(f"plan_reuse_N2^{ln}_b{b}_x{shards}", t_plan * 1e6,
              f"legacy={t_legacy*1e6:.1f}us;speedup={t_legacy/t_plan:.2f}x;"
              f"hlo/model={got/want:.3f}")
         rows.append((ln, b, t_plan, t_legacy, got, want))
+    return rows
+
+
+def run_overlap(smoke: bool = True):
+    """Chunked multi-transaction (double-buffered) pipelines: the overlap
+    model == HLO structure, hard-asserted.
+
+    For each chunk count C the chunked 1-D pipeline must lower to exactly
+    C all-to-alls whose TOTAL bytes equal ``collective_volume(chunks=C)``
+    — chunking re-grains the transfer, it must not add volume — and the
+    measured exposed-communication fraction (the largest single
+    all-to-all's bytes over the total: only one transaction's transfer has
+    no neighbouring local Stockham work to hide behind) must equal the
+    model's ``exposed_fraction = 1/C``. Outputs are asserted bitwise
+    identical to the bulk (C=1) pipeline — chunking is an execution
+    schedule, not a numerical change. The ft cell runs the grouped ABFT
+    chunked (whole checksum groups per transaction, each with its own
+    verdict psum); the spectral cell the 2C-all-to-all convolution round
+    trip. Wall clock per chunk count is emitted UNASSERTED: host-mesh
+    collectives are shared-memory memcpys with nothing to overlap, so the
+    latency win is a device-network property — the structural assertions
+    (count, bytes, exposed fraction, bitwise identity) are the contract.
+    """
+    ndev = min(4, len(jax.devices()))
+    shards = 1 << (ndev.bit_length() - 1)
+    if shards < 2:
+        print("# fft_overlap: single device visible — skipping")
+        return []
+    mesh = jax.make_mesh((shards,), ("fft",))
+    rng = np.random.default_rng(5)
+    rows = []
+    for ln, b in [(14, 8)] if smoke else [(14, 8), (17, 16)]:
+        n = 1 << ln
+        x = jnp.asarray((rng.standard_normal((b, n)) +
+                         1j * rng.standard_normal((b, n))
+                         ).astype(np.complex64))
+        y_bulk = np.asarray(
+            dist._dist_fft_fn(mesh, "fft", False, True, None, 1)(x))
+        for c in (1, 2, 4):
+            if b % c:
+                continue
+            fn = dist._dist_fft_fn(mesh, "fft", False, True, None, c)
+            meas = _measured_collectives(fn, x)
+            mdl = dist.collective_volume(n, b, shards, chunks=c)
+            a2a = [w for k, w in meas["ops"] if k == "all-to-all"]
+            assert len(a2a) == mdl["all_to_all_count"] == c, (c,
+                                                              meas["count"])
+            got, want = meas["total_bytes"], mdl["hlo_bytes"]
+            assert want and abs(got / want - 1.0) < 1e-3, (c, got, want)
+            exposed = max(a2a) / sum(a2a)
+            assert abs(exposed - mdl["exposed_fraction"]) < 1e-9, (
+                c, exposed, mdl["exposed_fraction"])
+            y_c = np.asarray(fn(x))
+            np.testing.assert_array_equal(y_c, y_bulk)
+            t_c = timeit(fn, x)
+            emit(f"overlap_N2^{ln}_b{b}_c{c}", t_c * 1e6,
+                 f"a2a={len(a2a)};exposed={exposed:.3f};"
+                 f"model={mdl['exposed_fraction']:.3f};"
+                 f"hlo/model={got/want:.3f}")
+            rows.append((ln, b, c, t_c, exposed, got, want))
+        # grouped ABFT, chunked: whole checksum groups per transaction,
+        # one verdict psum each — telemetry AND outputs bitwise identical
+        g = min(4, b)
+        if g > 1 and b % g == 0:
+            inj = jnp.zeros((1, 7), jnp.float32)
+            bulk_ft = dist._ft_dist_fft_fn(mesh, "fft", 1e-4, True, True, g,
+                                           None, 1)
+            chunk_ft = dist._ft_dist_fft_fn(mesh, "fft", 1e-4, True, True, g,
+                                            None, 2)
+            meas_ft = _measured_collectives(chunk_ft, x, inj)
+            mdl_ft = dist.collective_volume(n, b, shards, ft=True, groups=g,
+                                            chunks=2)
+            a2a_ft = [w for k, w in meas_ft["ops"] if k == "all-to-all"]
+            assert len(a2a_ft) == mdl_ft["all_to_all_count"] == 2, \
+                meas_ft["count"]
+            got, want = meas_ft["total_bytes"], mdl_ft["hlo_bytes"]
+            assert want and abs(got / want - 1.0) < 1e-3, (got, want)
+            exposed = max(a2a_ft) / sum(a2a_ft)
+            assert abs(exposed - mdl_ft["exposed_fraction"]) < 1e-9, exposed
+            rb, rc = bulk_ft(x, inj), chunk_ft(x, inj)
+            np.testing.assert_array_equal(np.asarray(rb.y), np.asarray(rc.y))
+            np.testing.assert_array_equal(np.asarray(rb.flagged),
+                                          np.asarray(rc.flagged))
+            emit(f"overlap_N2^{ln}_b{b}_ft_g{g}_c2", got,
+                 f"a2a=2;exposed={exposed:.3f};hlo/model={got/want:.3f}")
+        # spectral convolution round trip, chunked: 2C all-to-alls
+        if b % (shards * 2) == 0:
+            vj = jnp.asarray((rng.standard_normal((1, n)) +
+                              1j * rng.standard_normal((1, n))
+                              ).astype(np.complex64))
+            bulk_cv = np.asarray(
+                spec._spectral_pair_fn(mesh, "fft", None, False, 1)(x, vj))
+            for c in (1, 2):
+                fn = spec._spectral_pair_fn(mesh, "fft", None, False, c)
+                meas_cv = _measured_collectives(fn, x, vj)
+                mdl_cv = dist.spectral_volume(n, b, shards, kernel_batch=1,
+                                              chunks=c)
+                a2a_cv = [w for k, w in meas_cv["ops"] if k == "all-to-all"]
+                assert len(a2a_cv) == mdl_cv["all_to_all_count"] == 2 * c, (
+                    c, meas_cv["count"])
+                got, want = meas_cv["total_bytes"], mdl_cv["hlo_bytes"]
+                assert want and abs(got / want - 1.0) < 2e-3, (c, got, want)
+                np.testing.assert_array_equal(np.asarray(fn(x, vj)), bulk_cv)
+                emit(f"overlap_conv_N2^{ln}_b{b}_c{c}", got,
+                     f"a2a={len(a2a_cv)};hlo/model={got/want:.3f}")
     return rows
 
 
@@ -516,4 +631,5 @@ if __name__ == "__main__":
     run_mesh2d(smoke=True)
     run_multidim(smoke=True)
     run_plan_reuse(smoke=True)
+    run_overlap(smoke=True)
     run_real(smoke=True)

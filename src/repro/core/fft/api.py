@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import sys
 import warnings
 
 import jax
@@ -39,13 +40,13 @@ from repro.core.plan import FTConfig
 
 from . import multidim
 from .distributed import (_AUTO, FFT_AXIS, _resolve_data_axis, _resolve_mesh,
-                          collective_volume, distributed_fft,
+                          choose_chunks, collective_volume, distributed_fft,
                           ft_distributed_fft, make_dist_plan,
-                          resolve_abft_groups)
+                          resolve_abft_groups, resolve_chunks)
 
 __all__ = ["FFTSpec", "FTConfig", "FFTPlan", "plan", "spec_for",
            "plan_cache_info", "plan_cache_clear",
-           "FFTKwargDeprecationWarning"]
+           "FFTKwargDeprecationWarning", "reset_deprecation_warnings"]
 
 _COMPLEX_DTYPES = ("complex64", "complex128")
 
@@ -56,14 +57,31 @@ class FFTKwargDeprecationWarning(DeprecationWarning):
     deprecated in favor of ``plan(FFTSpec(...))`` executors."""
 
 
-_warned_entries: set[str] = set()
+_warned_entries: set[tuple] = set()
+
+
+def reset_deprecation_warnings() -> None:
+    """Clear the one-shot :class:`FFTKwargDeprecationWarning` state so the
+    next legacy-kwarg call warns again. For test isolation (pair with
+    ``warnings.catch_warnings``): the one-shot set is process-global, so
+    without a reset only the first test touching an entry point ever sees
+    the warning."""
+    _warned_entries.clear()
 
 
 def warn_deprecated_kwargs(entry: str, names) -> None:
-    """One-shot deprecation warning for a legacy kwarg path (per entry)."""
-    if entry in _warned_entries:
+    """One-shot deprecation warning for a legacy kwarg path, keyed by entry
+    point AND call site (the frame ``stacklevel=3`` attributes the warning
+    to) — two different legacy callers each get their own warning, repeat
+    calls from the same line stay silent."""
+    try:
+        fr = sys._getframe(2)
+        key = (entry, fr.f_code.co_filename, fr.f_lineno)
+    except ValueError:                 # shallow stack (exotic embedding)
+        key = (entry,)
+    if key in _warned_entries:
         return
-    _warned_entries.add(entry)
+    _warned_entries.add(key)
     warnings.warn(
         f"{entry}({', '.join(sorted(names))}=...) is deprecated: build an "
         f"FFTSpec once and call plan(spec).{entry.rsplit('.', 1)[-1]}(x) "
@@ -94,6 +112,18 @@ class FFTSpec:
     kernel. Specs are value objects: equal specs hash equal and hit the
     same cached :class:`FFTPlan`.
 
+    ``chunks`` is the multi-transaction pipelining knob: split the batch
+    (1-D / spectral; ABFT plans split whole checksum groups) or the
+    pencil cube into that many transactions so transaction i's
+    all-to-alls overlap transaction i+1's local Stockham passes. ``1`` =
+    bulk-synchronous (the default), ``0`` = auto — an ft plan reuses
+    ``FTConfig.transactions``, otherwise :func:`~repro.core.fft
+    .distributed.choose_chunks` picks from the modeled all-to-all bytes.
+    The plan resolves the effective count once (clamped so every
+    transaction stays shard- and group-divisible; slab/local/real paths
+    are bulk-synchronous and resolve to 1); results are bitwise-identical
+    for every chunk count.
+
     ``real=True`` declares the OPERAND real-valued: ``shape`` stays the
     full real shape, ``dtype`` is the complex precision the half spectrum
     carries (``complex64``/``complex128``), and the plan binds the
@@ -115,6 +145,7 @@ class FFTSpec:
     ft: FTConfig | None = None
     interpret: bool | None = None
     real: bool = False
+    chunks: int = 1
 
     def __post_init__(self):
         shape = tuple(int(s) for s in self.shape)
@@ -156,6 +187,12 @@ class FFTSpec:
         if self.ft is not None and not isinstance(self.ft, FTConfig):
             raise ValueError(f"FFTSpec.ft must be an FTConfig, "
                              f"got {type(self.ft).__name__}")
+        if not isinstance(self.chunks, int) or isinstance(self.chunks, bool) \
+                or self.chunks < 0:
+            raise ValueError(
+                f"FFTSpec.chunks must be a non-negative int (0 = auto, 1 = "
+                f"bulk-synchronous, k = k transactions), got "
+                f"{self.chunks!r}")
         if self.real:
             if self.rank == 3:
                 raise ValueError(
@@ -194,7 +231,8 @@ def spec_for(x, *, rank: int = 1, mesh: Mesh | None = None,
              axis: str = FFT_AXIS, data_axis: str | None = _AUTO,
              decomp: str = "auto", natural_order: bool = True,
              ft: FTConfig | None = None,
-             interpret: bool | None = None, real: bool = False) -> FFTSpec:
+             interpret: bool | None = None, real: bool = False,
+             chunks: int = 1) -> FFTSpec:
     """Build the :class:`FFTSpec` describing ``x``'s transform.
 
     With ``mesh=None`` the mesh is inferred from ``x``'s committed sharding
@@ -216,7 +254,7 @@ def spec_for(x, *, rank: int = 1, mesh: Mesh | None = None,
     return FFTSpec(shape=tuple(x.shape), dtype=jnp.dtype(dt).name, rank=rank,
                    mesh=mesh, axis=axis, data_axis=data_axis, decomp=decomp,
                    natural_order=natural_order, ft=ft, interpret=interpret,
-                   real=real)
+                   real=real, chunks=chunks)
 
 
 def _feasible_1d(n: int, shards: int) -> bool:
@@ -271,6 +309,9 @@ class FFTPlan(planbase.Plan):
                     data_shards=self.dsize)
         self._rdtype = jnp.dtype(
             jnp.float64 if spec.dtype == "complex128" else jnp.float32)
+        # effective transaction count; the chunked builders re-resolve this
+        # (slab / local / real paths stay bulk-synchronous)
+        self.chunks = 1
         if self.rank == 1:
             self._build_1d()
         else:
@@ -303,28 +344,46 @@ class FFTPlan(planbase.Plan):
         self.dist_plan = make_dist_plan(n, self.shards, spec.axis)
         self.in_spec, self.out_spec = layout_specs(
             1, "pencil", axis=spec.axis, data_axis=self.daxis)
-        from .distributed import _dist_fft_fn, _dist_ifft_t_fn
-        self._fwd = _dist_fft_fn(self.mesh, spec.axis, False,
-                                 spec.natural_order, self.daxis)
-        if spec.natural_order:
-            self._inv = _dist_fft_fn(self.mesh, spec.axis, True, True,
-                                     self.daxis)
-        else:
-            _dist_ifft_t_fn(self.mesh, spec.axis, self.daxis)  # pre-build
-            self._inv = functools.partial(
-                distributed_fft, mesh=self.mesh, axis=spec.axis,
-                inverse=True, natural_order=False, data_axis=self.daxis)
         ft = spec.ft
-        if ft is not None:
-            from .distributed import _ft_dist_fft_fn
-            _ft_dist_fft_fn(self.mesh, spec.axis, float(ft.threshold),
-                            bool(ft.correct), bool(spec.natural_order),
-                            self.groups, self.daxis)  # pre-build/trace cache
-        self.volume = collective_volume(
+        base = collective_volume(
             n, max(self.batch, 1), self.shards,
             itemsize=self.spec.np_dtype.itemsize,
             ft=ft is not None, natural_order=spec.natural_order,
             groups=self.groups or 1, data_shards=self._model_dsize())
+        # transactions split local batch rows (whole checksum groups on an
+        # ft plan): resolve spec.chunks once against the per-device count
+        rows = ((self.groups if ft is not None else max(self.batch, 1))
+                // max(self._model_dsize(), 1))
+        requested = spec.chunks
+        if requested == 0:          # auto: ft reuses FTConfig.transactions
+            requested = (ft.transactions if ft is not None
+                         else choose_chunks(base["all_to_all_bytes"], rows))
+        self.chunks = resolve_chunks(rows, max(1, requested)) if rows else 1
+        from .distributed import _dist_fft_fn, _dist_ifft_t_fn
+        self._fwd = _dist_fft_fn(self.mesh, spec.axis, False,
+                                 spec.natural_order, self.daxis, self.chunks)
+        if spec.natural_order:
+            self._inv = _dist_fft_fn(self.mesh, spec.axis, True, True,
+                                     self.daxis, self.chunks)
+        else:
+            _dist_ifft_t_fn(self.mesh, spec.axis, self.daxis,
+                            self.chunks)                       # pre-build
+            self._inv = functools.partial(
+                distributed_fft, mesh=self.mesh, axis=spec.axis,
+                inverse=True, natural_order=False, data_axis=self.daxis,
+                chunks=self.chunks)
+        if ft is not None:
+            from .distributed import _ft_dist_fft_fn
+            _ft_dist_fft_fn(self.mesh, spec.axis, float(ft.threshold),
+                            bool(ft.correct), bool(spec.natural_order),
+                            self.groups, self.daxis,
+                            self.chunks)  # pre-build/trace cache
+        self.volume = collective_volume(
+            n, max(self.batch, 1), self.shards,
+            itemsize=self.spec.np_dtype.itemsize,
+            ft=ft is not None, natural_order=spec.natural_order,
+            groups=self.groups or 1, data_shards=self._model_dsize(),
+            chunks=self.chunks)
 
     def _build_1d_real(self, n: int):
         """Bind the rank-1 real executors (rfft/irfft).
@@ -353,6 +412,15 @@ class FFTPlan(planbase.Plan):
                 itemsize=self.spec.np_dtype.itemsize,
                 natural_order=True, data_shards=self._model_dsize(),
                 real=True)
+            # rfft/irfft themselves are bulk-synchronous; the chunk knob
+            # feeds the spectral consumer (convolve/correlate round trip)
+            rows = max(self.batch, 1) // max(self._model_dsize(), 1)
+            requested = spec.chunks
+            if requested == 0:
+                requested = choose_chunks(
+                    self.volume["all_to_all_bytes"], rows)
+            self.chunks = resolve_chunks(rows, max(1, requested)) \
+                if rows else 1
 
     def _build_nd_real(self):
         """Bind the rank-2 real executors (rfft2/irfft2).
@@ -482,16 +550,28 @@ class FFTPlan(planbase.Plan):
                 f"(power-of-two axes), got {self.tshape} — use "
                 f"decomp='slab' or a smaller mesh")
         self.decomp = decomp
+        if decomp == multidim.DECOMP_PENCIL:
+            base = multidim.collective_volume_nd(
+                self.tshape, max(self.batch, 1), self.shards, decomp=decomp,
+                itemsize=self.spec.np_dtype.itemsize,
+                data_shards=self.dsize, natural_order=spec.natural_order)
+            requested = spec.chunks
+            if requested == 0:
+                requested = choose_chunks(base["all_to_all_bytes"],
+                                          self._nd_chunk_rows())
+            self.chunks = self._effective_nd_chunks(max(1, requested))
         self.in_spec, self.out_spec = layout_specs(
             self.rank, decomp, axis=spec.axis, data_axis=self.daxis)
         self._fwd = functools.partial(
             multidim.distributed_fftn, mesh=self.mesh, ndim=self.rank,
             decomp=decomp, inverse=False, natural_order=spec.natural_order,
-            axis=spec.axis, data_axis=self.daxis, interpret=spec.interpret)
+            axis=spec.axis, data_axis=self.daxis, interpret=spec.interpret,
+            chunks=self.chunks)
         self._inv = functools.partial(
             multidim.distributed_fftn, mesh=self.mesh, ndim=self.rank,
             decomp=decomp, inverse=True, natural_order=spec.natural_order,
-            axis=spec.axis, data_axis=self.daxis, interpret=spec.interpret)
+            axis=spec.axis, data_axis=self.daxis, interpret=spec.interpret,
+            chunks=self.chunks)
         # pre-build the jitted pipelines so first execution never resolves
         if decomp == multidim.DECOMP_SLAB:
             multidim._slab_fftn_fn(self.mesh, spec.axis, self.rank, False,
@@ -500,7 +580,8 @@ class FFTPlan(planbase.Plan):
                                    self.daxis)
         else:
             multidim._pencil_fftn_fn(self.mesh, spec.axis, self.rank, False,
-                                     bool(spec.natural_order), self.daxis)
+                                     bool(spec.natural_order), self.daxis,
+                                     self.chunks)
         if ft is not None:
             multidim._ft_slab_fft2_fn(
                 self.mesh, spec.axis, float(ft.threshold), bool(ft.correct),
@@ -511,9 +592,28 @@ class FFTPlan(planbase.Plan):
             groups=self.groups or 1,
             data_shards=(self._model_dsize()
                          if decomp == multidim.DECOMP_SLAB else self.dsize),
-            natural_order=spec.natural_order)
+            natural_order=spec.natural_order, chunks=self.chunks)
 
     # -- helpers ----------------------------------------------------------
+
+    def _nd_chunk_rows(self) -> int:
+        """The size of the axis pencil transactions would split: the
+        (replicated) batch when it has rows, else the first leading local
+        transform axis (the rank-3 single-grid case)."""
+        for size in (max(self.batch, 1),) + tuple(self.tshape[:-2]):
+            if size > 1:
+                return size
+        return 1
+
+    def _effective_nd_chunks(self, requested: int) -> int:
+        """Mirror of the pencil pipeline's chunk-axis selection
+        (``multidim._chunk_apply``): the first candidate axis that can
+        carry more than one transaction decides the effective count."""
+        for size in (max(self.batch, 1),) + tuple(self.tshape[:-2]):
+            ce = resolve_chunks(size, requested)
+            if ce > 1:
+                return ce
+        return 1
 
     def _model_dsize(self) -> int:
         """The data-shard count the pipeline actually uses: the batch (and
@@ -698,7 +798,8 @@ class FFTPlan(planbase.Plan):
                 x, self.mesh, axis=self.spec.axis, threshold=ft.threshold,
                 correct=ft.correct, natural_order=self.spec.natural_order,
                 inject=inject, groups=self.groups, data_axis=self.daxis,
-                recompute_uncorrectable=ft.recompute_uncorrectable)
+                recompute_uncorrectable=ft.recompute_uncorrectable,
+                chunks=self.chunks)
         return multidim.ft_distributed_fft2(
             x, self.mesh, axis=self.spec.axis, threshold=ft.threshold,
             correct=ft.correct, inject=inject, groups=self.groups,
@@ -742,7 +843,7 @@ class FFTPlan(planbase.Plan):
         full = spec_mod._spectral_pair(
             spec_mod._pad_tail(a, nfft), spec_mod._pad_tail(v, nfft),
             self.mesh, self.spec.axis, self.daxis, conj_kernel=conj_kernel,
-            out_len=out_len)
+            out_len=out_len, chunks=self.chunks)
         if conj_kernel:
             full = jnp.roll(full, lv - 1, axis=-1)[..., :la + lv - 1]
         out = spec_mod._crop(full, la, lv, mode)
@@ -771,6 +872,7 @@ class FFTPlan(planbase.Plan):
         return (f"FFTPlan(shape={s.shape}, dtype={s.dtype}, rank={s.rank}, "
                 f"decomp={self.decomp!r}, shards={self.shards}, "
                 f"data={self.dsize}, groups={self.groups}, "
+                f"chunks={self.chunks}, "
                 f"natural_order={s.natural_order}, ft={s.ft is not None})")
 
 

@@ -79,7 +79,8 @@ EPS = 1e-30
 __all__ = [
     "DistPlan", "DistFFTResult", "make_dist_plan", "distributed_fft",
     "distributed_ifft", "ft_distributed_fft", "resolve_abft_groups",
-    "collective_volume", "spectral_volume", "FFT_AXIS", "DATA_AXIS",
+    "resolve_chunks", "choose_chunks", "collective_volume",
+    "spectral_volume", "FFT_AXIS", "DATA_AXIS",
 ]
 
 # Canonical mesh-axis name for the signal (pencil) dimension; see
@@ -121,6 +122,49 @@ def _resolve_data_axis(mesh, data_axis):
     if data_axis not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no '{data_axis}' axis")
     return data_axis if mesh.shape[data_axis] > 1 else None
+
+
+def resolve_chunks(rows: int, chunks: int, *, granule: int = 1) -> int:
+    """The largest feasible transaction count <= ``chunks`` for ``rows``.
+
+    A chunked pipeline splits its per-shard rows (batch rows, or whole
+    checksum groups, or pencil digit planes) into ``chunks`` equal
+    transactions so transaction i's all-to-all overlaps transaction i+1's
+    local Stockham passes — the mesh-level analogue of the paper's
+    multi-transaction threadblock design. Every transaction must carry the
+    same whole number of rows, and each chunk's row count must stay a
+    multiple of ``granule`` (``shards`` for the batch-splitting inverse
+    all-to-all, 1 elsewhere). Static Python arithmetic — safe under jit.
+    """
+    c = max(1, min(int(chunks), int(rows) if rows else 1))
+    while c > 1 and (rows % c or (rows // c) % max(granule, 1)):
+        c -= 1
+    return c
+
+
+# Per-transaction fixed cost of one all-to-all, in payload-equivalent bytes
+# (dispatch + link latency amortized over the message). Splitting into C
+# chunks exposes ~ C*L + bytes/C of communication (first chunk's transfer
+# plus per-chunk launch overhead), minimized at C* = sqrt(bytes / L). 64 KiB
+# is conservative for both host meshes and TPU ICI: below it, a2a time is
+# latency-dominated and chunking buys nothing.
+CHUNK_LATENCY_BYTES = 1 << 16
+
+
+def choose_chunks(a2a_bytes: float, rows: int, *, granule: int = 1,
+                  max_chunks: int = 8) -> int:
+    """Auto transaction count from the collective-volume model.
+
+    Picks the power of two nearest below ``C* = sqrt(a2a_bytes /
+    CHUNK_LATENCY_BYTES)`` (the minimizer of the exposed-cost model
+    ``C*L + bytes/C``), capped at ``max_chunks``, then clamps to what
+    ``rows`` can actually carry (:func:`resolve_chunks`).
+    """
+    c_star = int(np.sqrt(max(float(a2a_bytes), 0.0) / CHUNK_LATENCY_BYTES))
+    c = 1
+    while c * 2 <= min(c_star, max_chunks):
+        c *= 2
+    return resolve_chunks(rows, c, granule=granule)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,11 +258,16 @@ def _batch_spec(data_axis, b, dsize):
 
 @functools.lru_cache(maxsize=None)
 def _dist_fft_fn(mesh: Mesh, axis: str, inverse: bool,
-                 natural_order: bool = True, data_axis: str | None = None):
+                 natural_order: bool = True, data_axis: str | None = None,
+                 chunks: int = 1):
     """Build the jitted shard_map pipeline for one (mesh, axis, direction).
 
     With ``data_axis`` set, batch rows shard over it (each data shard runs
     the pencil pipeline on its slice; the all-to-all stays within ``axis``).
+    ``chunks > 1`` splits the local batch into that many transactions —
+    chunk i's all-to-all overlaps chunk i+1's pass-1 compute; results are
+    bitwise-identical to the bulk-synchronous path (every per-row op is
+    independent of the batch split).
     """
     shards = mesh.shape[axis]
     dsize = mesh.shape[data_axis] if data_axis else 1
@@ -234,7 +283,7 @@ def _dist_fft_fn(mesh: Mesh, axis: str, inverse: bool,
         z = x.reshape((-1, n1, n2))
         bspec = _batch_spec(data_axis, z.shape[0], dsize)
 
-        def body(zl):
+        def pipeline(zl):
             d = jax.lax.axis_index(axis)
             n2l = zl.shape[-1]
             zl = jnp.swapaxes(zl, -1, -2)
@@ -245,6 +294,16 @@ def _dist_fft_fn(mesh: Mesh, axis: str, inverse: bool,
             zl = jax.lax.all_to_all(zl, axis, split_axis=1, concat_axis=2,
                                     tiled=True)          # (B, n1/D, n2)
             return _local_fft(zl, inverse)               # FFT over n2
+
+        def body(zl):
+            ce = resolve_chunks(zl.shape[0], chunks)
+            if ce == 1:
+                return pipeline(zl)
+            # one transaction per chunk: the unrolled a2as are independent,
+            # so the scheduler runs chunk i's transfer under chunk i+1's
+            # pass-1 compute
+            parts = jnp.split(zl, ce, axis=0)
+            return jnp.concatenate([pipeline(p) for p in parts], axis=0)
 
         out = shard_map(body, mesh=mesh,
                         in_specs=P(bspec, None, axis),
@@ -268,7 +327,8 @@ def _dist_fft_fn(mesh: Mesh, axis: str, inverse: bool,
 
 
 @functools.lru_cache(maxsize=None)
-def _dist_ifft_t_fn(mesh: Mesh, axis: str, data_axis: str | None = None):
+def _dist_ifft_t_fn(mesh: Mesh, axis: str, data_axis: str | None = None,
+                    chunks: int = 1):
     """Inverse pipeline consuming TRANSPOSED-order input (TRANSPOSED_IN).
 
     Input ``y[.., k1*N2 + k2] = X[k1 + N1*k2]`` — exactly what the forward
@@ -312,7 +372,7 @@ def _dist_ifft_t_fn(mesh: Mesh, axis: str, data_axis: str | None = None):
                 f"({dloc}*{shards}), got {b} — pad the batch "
                 f"(distributed_ifft does this automatically)")
 
-        def body(zl):
+        def pipeline(zl):
             d = jax.lax.axis_index(axis)
             n1l = zl.shape[-2]
             zl = _local_fft(zl, inverse=True)            # IFFT over k2
@@ -324,6 +384,23 @@ def _dist_ifft_t_fn(mesh: Mesh, axis: str, data_axis: str | None = None):
             zl = _local_fft(zl, inverse=True)            # IFFT over k1
             zl = jnp.swapaxes(zl, -1, -2)                # natural (n1, n2)
             return zl.reshape(zl.shape[0], n) / n        # flat, local
+
+        def body(zl):
+            # the a2a splits the batch into ``shards`` destination blocks;
+            # a chunk must take rows from WITHIN each block (a strided
+            # selection), else device d's resident rows after the split
+            # would be a permutation of the bulk path's
+            ce = resolve_chunks(zl.shape[0] // shards, chunks)
+            if ce == 1:
+                return pipeline(zl)
+            blocks = zl.reshape((shards, zl.shape[0] // shards)
+                                + zl.shape[1:])
+            w = blocks.shape[1] // ce
+            outs = []
+            for i in range(ce):
+                part = blocks[:, i * w:(i + 1) * w]
+                outs.append(pipeline(part.reshape((-1,) + zl.shape[1:])))
+            return jnp.concatenate(outs, axis=0)  # rows land in bulk order
 
         out_spec = P((bspec, axis) if bspec else axis, None)
         out = shard_map(body, mesh=mesh,
@@ -338,7 +415,8 @@ def _dist_ifft_t_fn(mesh: Mesh, axis: str, data_axis: str | None = None):
 def distributed_fft(x: jax.Array, mesh: Mesh | None = None, *,
                     axis: str = FFT_AXIS, inverse: bool = False,
                     natural_order: bool = True,
-                    data_axis: str | None = _AUTO) -> jax.Array:
+                    data_axis: str | None = _AUTO,
+                    chunks: int = 1) -> jax.Array:
     """FFT over the last axis, pencil-sharded over ``mesh.shape[axis]``
     devices. Matches ``jnp.fft.fft`` conventions. Batch dims shard over
     ``data_axis`` when the mesh carries one (auto-detected ``"data"`` by
@@ -354,6 +432,10 @@ def distributed_fft(x: jax.Array, mesh: Mesh | None = None, *,
 
     With ``mesh=None`` or a 1-sized axis this is exactly the local transform
     (where natural and transposed order coincide).
+
+    ``chunks > 1`` splits the batch into that many overlapped transactions
+    (multi-transaction pipelining; see :func:`resolve_chunks`) — results are
+    bitwise-identical to the bulk-synchronous default.
     """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
@@ -364,8 +446,9 @@ def distributed_fft(x: jax.Array, mesh: Mesh | None = None, *,
         return stockham.ifft(x) if inverse else stockham.fft(x)
     daxis = _resolve_data_axis(mesh, data_axis)
     if inverse and not natural_order:
-        return _ifft_transposed(x, mesh, axis, daxis)
-    return _dist_fft_fn(mesh, axis, inverse, natural_order, daxis)(x)
+        return _ifft_transposed(x, mesh, axis, daxis, chunks)
+    return _dist_fft_fn(mesh, axis, inverse, natural_order, daxis,
+                        int(chunks))(x)
 
 
 def _pad_batch_rows(x2d: jax.Array, dsize: int, shards: int):
@@ -384,7 +467,7 @@ def _pad_batch_rows(x2d: jax.Array, dsize: int, shards: int):
     return x2d, b
 
 
-def _ifft_transposed(x, mesh, axis, daxis):
+def _ifft_transposed(x, mesh, axis, daxis, chunks: int = 1):
     """Pad the batch so the inverse's batch-split all-to-all divides (and
     the data axis, when present, keeps dividing), run, slice back."""
     shards = mesh.shape[axis]
@@ -392,7 +475,7 @@ def _ifft_transposed(x, mesh, axis, daxis):
     lead = x.shape[:-1]
     n = x.shape[-1]
     x2d, b = _pad_batch_rows(x.reshape((-1, n)), dsize, shards)
-    out = _dist_ifft_t_fn(mesh, axis, daxis)(x2d)
+    out = _dist_ifft_t_fn(mesh, axis, daxis, int(chunks))(x2d)
     if out.shape[0] != b:
         out = out[:b]
     return out.reshape(lead + (n,))
@@ -400,7 +483,8 @@ def _ifft_transposed(x, mesh, axis, daxis):
 
 def distributed_ifft(x: jax.Array, mesh: Mesh | None = None, *,
                      axis: str = FFT_AXIS, natural_order: bool = True,
-                     data_axis: str | None = _AUTO) -> jax.Array:
+                     data_axis: str | None = _AUTO,
+                     chunks: int = 1) -> jax.Array:
     """Inverse of :func:`distributed_fft` (normalized by 1/N).
 
     ``natural_order=False`` consumes TRANSPOSED-order input (the forward's
@@ -408,7 +492,8 @@ def distributed_ifft(x: jax.Array, mesh: Mesh | None = None, *,
     result is natural-order time domain, batch-sharded over the mesh.
     """
     return distributed_fft(x, mesh, axis=axis, inverse=True,
-                           natural_order=natural_order, data_axis=data_axis)
+                           natural_order=natural_order, data_axis=data_axis,
+                           chunks=chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -487,7 +572,7 @@ def resolve_abft_groups(batch: int, *, groups: int | None = None,
 
 
 def _grouped_verdict(ylg, d2, d3, cs2_out, *, axis, threshold, s, n, md, bl,
-                     gl, correct):
+                     gl, correct, row_offset=0):
     """The shared per-group two-side decode, from checksum divergences to
     verdicts — used by BOTH the 1-D pencil ft pipeline here and the 2-D
     slab ft pipeline (``multidim._ft_slab_fft2_fn``), so the fault
@@ -501,6 +586,11 @@ def _grouped_verdict(ylg, d2, d3, cs2_out, *, axis, threshold, s, n, md, bl,
     verdict is ONE psum of 3 scalars per locally-owned group + 1 shared
     energy scalar, confined to ``axis``. Returns ``(ylg, stats)`` with the
     located signal repaired in place when ``correct``.
+
+    ``row_offset`` is the first data row this call covers within its data
+    shard — non-zero when a chunked pipeline runs one verdict per
+    transaction over a slice of the local groups, so decoded ``location``
+    stays a global signal index.
     """
     num = jnp.sum((d3 * jnp.conj(d2)).real, axis=(1, 2))
     den = jnp.sum(jnp.abs(d2) ** 2, axis=(1, 2))
@@ -534,7 +624,7 @@ def _grouped_verdict(ylg, d2, d3, cs2_out, *, axis, threshold, s, n, md, bl,
     checksum_fault = cs2_fault | cs3_fault
     flagged = flagged2 | cs3_fault
     loc_local = jnp.clip(rid - 1, 0, s - 1)
-    location = md * bl + jnp.arange(gl) * s + loc_local
+    location = md * bl + row_offset + jnp.arange(gl) * s + loc_local
     if correct:
         # d2 is the local slice of -eps_y: elementwise repair of the
         # located signal works no matter which shard holds the fault
@@ -576,7 +666,7 @@ def _splice_recomputed(x, res, groups, recompute_fn, caller: str):
 @functools.lru_cache(maxsize=None)
 def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
                     natural_order: bool = True, groups: int = 1,
-                    data_axis: str | None = None):
+                    data_axis: str | None = None, chunks: int = 1):
     shards = mesh.shape[axis]
     dsize = mesh.shape[data_axis] if data_axis else 1
 
@@ -596,6 +686,11 @@ def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
             data_axis and b % dsize == 0 and g % dsize == 0) else None
         dloc = dsize if bspec else 1
         bl, gl = b // dloc, g // dloc   # per-data-shard rows / groups
+        # transactions carry WHOLE checksum groups, so each chunk's verdict
+        # (including its energy normalizer) is self-contained — the paper's
+        # multi-transaction amortization with the reduction riding per-chunk
+        ce = resolve_chunks(gl, chunks)
+        glc, blc = gl // ce, bl // ce   # per-transaction groups / rows
         # right-side encodings per group: e2 = ones (correction value),
         # e3 = 1-based within-group ids (location) — twoside.py's pipeline
         # applied along the *unsharded* batch axis so building them is local.
@@ -607,76 +702,105 @@ def _ft_dist_fft_fn(mesh: Mesh, axis: str, threshold: float, correct: bool,
             d = jax.lax.axis_index(axis)
             md = jax.lax.axis_index(data_axis) if bspec else jnp.int32(0)
             n2l = zl.shape[-1]
-            # input checksums ride as 2 extra rows PER GROUP:
-            # rows [0, bl) data | [bl, bl+gl) cs2 | [bl+gl, bl+2gl) cs3
-            zg = zl.reshape((gl, s, n1, n2l))
-            cs2_in = jnp.sum(zg, axis=1)
-            cs3_in = jnp.sum(ids * zg, axis=1)
-            zc = jnp.concatenate([zl, cs2_in, cs3_in], axis=0)
-            # ---- pass 1: FFT over n1 (local) + left checksum --------------
-            zt = jnp.swapaxes(zc, -1, -2)
-            zf = block_fft_stages(zt, inverse=False)
-            # sum_k1 W[k1, n1] = n1*delta(n1): column sums predict from x[0]
-            # residual scaling stays in the input's real dtype (a float32
-            # constant would silently downcast the fp64 telemetry and
-            # inflate false-positive risk at tight thresholds)
-            res1 = jnp.abs(jnp.sum(zf, axis=-1) - n1 * zt[..., 0])
-            scale1 = jnp.sqrt(jnp.mean(jnp.abs(zt) ** 2, axis=-1)) + EPS
-            delta = jnp.max(res1 / (float(np.sqrt(n1)) * scale1))
-            zc = jnp.swapaxes(zf, -1, -2)                # (bl+2gl, n1, n2l)
-            twl = jax.lax.dynamic_slice_in_dim(tw, d * n2l, n2l, axis=1)
-            zc = zc * twl
-            # ---- fault injection (tests/benchmarks): one SEU per inject
-            # row [fft_device, signal, row, local_col, enable, eps_re,
-            # eps_im] on the pass-1 output. ``signal`` is global: [0, B)
-            # hits data rows, [B, B+G) the cs2 row of group signal-B,
-            # [B+G, B+2G) the cs3 row of group signal-B-G -------------------
+            # ---- fault-injection decode (tests/benchmarks): one SEU per
+            # inject row [fft_device, signal, row, local_col, enable,
+            # eps_re, eps_im] on the pass-1 output. ``signal`` is global:
+            # [0, B) hits data rows, [B, B+G) the cs2 row of group
+            # signal-B, [B+G, B+2G) the cs3 row of group signal-B-G --------
             dev = inject[:, 0].astype(jnp.int32)
             sig = inject[:, 1].astype(jnp.int32)
             row = inject[:, 2].astype(jnp.int32)
             col = inject[:, 3].astype(jnp.int32)
-            eps = (inject[:, 5] + 1j * inject[:, 6]).astype(zc.dtype)
             is_data = sig < b
             is_cs2 = (sig >= b) & (sig < b + g)
             gidx = jnp.where(is_cs2, sig - b, sig - b - g)
             owner = jnp.where(is_data, sig // bl, gidx // gl)
-            lrow = jnp.where(
-                is_data, sig - owner * bl,
-                bl + jnp.where(is_cs2, 0, gl) + gidx - owner * gl)
+            drow = sig - owner * bl      # data row, local to the data shard
+            grow = gidx - owner * gl     # group index, local to the shard
             amp = inject[:, 4] * ((owner == md) & (d == dev)).astype(ftype)
-            onehot = (
-                (jnp.arange(bl + 2 * gl)[None] == lrow[:, None])
-                [:, :, None, None]
-                * (jnp.arange(n1)[None] == row[:, None])[:, None, :, None]
-                * (jnp.arange(n2l)[None] == col[:, None])[:, None, None, :])
-            zc = zc + jnp.sum((eps * amp.astype(zc.real.dtype))
-                              [:, None, None, None]
-                              * onehot.astype(zc.real.dtype), axis=0)
-            # ---- the one collective: transpose between passes -------------
-            zc = jax.lax.all_to_all(zc, axis, split_axis=1, concat_axis=2,
-                                    tiled=True)          # (bl+2gl, n1/D, n2)
-            # ---- pass 2: FFT over n2 (local) + left checksum --------------
-            zf2 = _local_fft(zc, inverse=False)
-            res2 = jnp.abs(jnp.sum(zf2, axis=-1) - n2 * zc[..., 0])
-            scale2 = jnp.sqrt(jnp.mean(jnp.abs(zc) ** 2, axis=-1)) + EPS
-            delta = jnp.maximum(
-                delta, jnp.max(res2 / (float(np.sqrt(n2)) * scale2)))
-            # ---- detect / locate per group: output checksums vs
-            # transported ones --------------------------------------------
-            yl = zf2[:bl]
-            fcs2, fcs3 = zf2[bl:bl + gl], zf2[bl + gl:]  # F(cs_in), sharded
-            ylg = yl.reshape((gl, s) + yl.shape[1:])
-            cs2_out = jnp.sum(ylg, axis=1)
-            cs3_out = jnp.sum(ids * ylg, axis=1)
-            d2 = fcs2 - cs2_out                          # == -eps_y, sharded
-            d3 = fcs3 - cs3_out                          # == -id_s * eps_y
-            # the verdict: 3 scalars per locally-owned group + ONE shared
-            # energy scalar, psum'd over the fft axis only — the data axis
-            # never participates (each data shard owns its groups outright)
-            ylg, stats = _grouped_verdict(
-                ylg, d2, d3, cs2_out, axis=axis, threshold=threshold, s=s,
-                n=n, md=md, bl=bl, gl=gl, correct=correct)
-            yl = ylg.reshape((bl,) + yl.shape[1:])
+
+            def transaction(zlc, ci):
+                # input checksums ride as 2 extra rows PER GROUP:
+                # rows [0, blc) data | [blc, blc+glc) cs2 | [.., +2glc) cs3
+                zg = zlc.reshape((glc, s, n1, n2l))
+                cs2_in = jnp.sum(zg, axis=1)
+                cs3_in = jnp.sum(ids * zg, axis=1)
+                zc = jnp.concatenate([zlc, cs2_in, cs3_in], axis=0)
+                # ---- pass 1: FFT over n1 (local) + left checksum ----------
+                zt = jnp.swapaxes(zc, -1, -2)
+                zf = block_fft_stages(zt, inverse=False)
+                # sum_k1 W[k1, n1] = n1*delta(n1): column sums predict from
+                # x[0]; residual scaling stays in the input's real dtype (a
+                # float32 constant would silently downcast the fp64
+                # telemetry and inflate false-positive risk at tight
+                # thresholds)
+                res1 = jnp.abs(jnp.sum(zf, axis=-1) - n1 * zt[..., 0])
+                scale1 = jnp.sqrt(jnp.mean(jnp.abs(zt) ** 2, axis=-1)) + EPS
+                delta = jnp.max(res1 / (float(np.sqrt(n1)) * scale1))
+                zc = jnp.swapaxes(zf, -1, -2)           # (blc+2glc, n1, n2l)
+                twl = jax.lax.dynamic_slice_in_dim(tw, d * n2l, n2l, axis=1)
+                zc = zc * twl
+                # ---- injection, masked to this transaction's rows ---------
+                in_chunk = jnp.where(
+                    is_data,
+                    (drow >= ci * blc) & (drow < (ci + 1) * blc),
+                    (grow >= ci * glc) & (grow < (ci + 1) * glc))
+                crow = jnp.where(
+                    is_data, drow - ci * blc,
+                    blc + jnp.where(is_cs2, 0, glc) + grow - ci * glc)
+                eps = (inject[:, 5] + 1j * inject[:, 6]).astype(zc.dtype)
+                ampc = amp * in_chunk.astype(ftype)
+                onehot = (
+                    (jnp.arange(blc + 2 * glc)[None] == crow[:, None])
+                    [:, :, None, None]
+                    * (jnp.arange(n1)[None] == row[:, None])
+                    [:, None, :, None]
+                    * (jnp.arange(n2l)[None] == col[:, None])
+                    [:, None, None, :])
+                zc = zc + jnp.sum((eps * ampc.astype(zc.real.dtype))
+                                  [:, None, None, None]
+                                  * onehot.astype(zc.real.dtype), axis=0)
+                # ---- the one collective per transaction: the transpose ----
+                zc = jax.lax.all_to_all(zc, axis, split_axis=1,
+                                        concat_axis=2,
+                                        tiled=True)     # (blc+2glc, n1/D, n2)
+                # ---- pass 2: FFT over n2 (local) + left checksum ----------
+                zf2 = _local_fft(zc, inverse=False)
+                res2 = jnp.abs(jnp.sum(zf2, axis=-1) - n2 * zc[..., 0])
+                scale2 = jnp.sqrt(jnp.mean(jnp.abs(zc) ** 2, axis=-1)) + EPS
+                delta = jnp.maximum(
+                    delta, jnp.max(res2 / (float(np.sqrt(n2)) * scale2)))
+                # ---- detect / locate per group: output checksums vs
+                # transported ones ------------------------------------------
+                yl = zf2[:blc]
+                fcs2 = zf2[blc:blc + glc]               # F(cs_in), sharded
+                fcs3 = zf2[blc + glc:]
+                ylg = yl.reshape((glc, s) + yl.shape[1:])
+                cs2_out = jnp.sum(ylg, axis=1)
+                cs3_out = jnp.sum(ids * ylg, axis=1)
+                d2 = fcs2 - cs2_out                     # == -eps_y, sharded
+                d3 = fcs3 - cs3_out                     # == -id_s * eps_y
+                # the verdict: 3 scalars per transaction-owned group + ONE
+                # energy scalar, psum'd over the fft axis only — the data
+                # axis never participates (each data shard owns its groups
+                # outright), and each transaction settles its own verdict
+                # so correction stays online while later chunks are still
+                # in flight
+                ylg, stats = _grouped_verdict(
+                    ylg, d2, d3, cs2_out, axis=axis, threshold=threshold,
+                    s=s, n=n, md=md, bl=bl, gl=glc, correct=correct,
+                    row_offset=ci * blc)
+                return ylg.reshape((blc,) + yl.shape[1:]), delta, stats
+
+            if ce == 1:
+                yl, delta, stats = transaction(zl, 0)
+            else:
+                outs = [transaction(p, ci)
+                        for ci, p in enumerate(jnp.split(zl, ce, axis=0))]
+                yl = jnp.concatenate([o[0] for o in outs], axis=0)
+                delta = functools.reduce(jnp.maximum,
+                                         [o[1] for o in outs])
+                stats = jnp.concatenate([o[2] for o in outs], axis=0)
             return yl, delta[None, None], stats[None]
 
         yl, deltas, stats = shard_map(
@@ -726,6 +850,7 @@ def ft_distributed_fft(
     group_size: int | None = None,
     data_axis: str | None = _AUTO,
     recompute_uncorrectable: bool = False,
+    chunks: int = 1,
 ) -> DistFFTResult:
     """Fault-tolerant sharded forward FFT (grouped two-side ABFT).
 
@@ -758,6 +883,14 @@ def ft_distributed_fft(
 
     ``natural_order=False`` keeps ``y`` in the transposed digit order (still
     sharded, no final all-gather); the telemetry is order-independent.
+
+    ``chunks > 1`` splits the local groups into that many overlapped
+    transactions, each carrying whole checksum groups AND its own verdict
+    psum — correction stays online per transaction. ``y``, the flag
+    booleans, and decoded locations are identical to the bulk path;
+    ``group_score`` normalizes against the transaction's own energy rather
+    than the whole batch's (per-transaction semantics, matching the
+    paper's multi-transaction reductions).
     """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
@@ -779,7 +912,8 @@ def ft_distributed_fft(
     if inject.ndim == 1:
         inject = inject[None]
     res = _ft_dist_fft_fn(mesh, axis, float(threshold), bool(correct),
-                          bool(natural_order), g, daxis)(x, inject)
+                          bool(natural_order), g, daxis,
+                          int(chunks))(x, inject)
     if recompute_uncorrectable:
         res = _recompute_uncorrectable(x, res, mesh, axis, g,
                                        bool(natural_order))
@@ -794,7 +928,7 @@ def ft_distributed_fft(
 def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
                       ft: bool = False, natural_order: bool = True,
                       groups: int = 1, data_shards: int = 1,
-                      real: bool = False) -> dict:
+                      real: bool = False, chunks: int = 1) -> dict:
     """Analytic per-device communication model of one distributed transform.
 
     Three terms (cross-checked against the post-partitioning HLO by
@@ -809,15 +943,28 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
       (skipped entirely with ``natural_order=False`` — checksum rows never
       pay it either);
     * the grouped ABFT verdict: one psum of 3 scalars per locally-owned
-      checksum group plus ONE shared energy scalar — the mesh-level
-      analogue of the paper's amortized threadblock reduction, and it stays
-      confined to the ``fft`` axis (each data shard owns
+      checksum group plus ONE energy scalar per transaction — the
+      mesh-level analogue of the paper's amortized threadblock reduction,
+      and it stays confined to the ``fft`` axis (each data shard owns
       ``groups/data_shards`` groups outright). The scalars live in the
       input's *real* dtype, i.e. ``itemsize / 2`` bytes each (f64 for
       complex128 — hard-coding 4 bytes made the model diverge from the HLO
-      for fp64). The checksum *signals* add ``2*groups/batch`` relative
+      for fp64). Extracting the replicated per-group stats block
+      (``5 * groups/data_shards`` reals) from the shard_map output costs
+      one more small all-reduce — GSPMD's broadcast of shard 0's copy —
+      which the model counts so the HLO cross-check holds to pure relative
+      tolerance. The checksum *signals* add ``2*groups/batch`` relative
       all-to-all volume (they ride the same transpose), which is the
       ``abft_overhead`` field.
+
+    ``chunks`` is the multi-transaction pipelining degree: the payload
+    splits into that many back-to-back all-to-alls (same total bytes —
+    ``all_to_all_count`` reports the op count) so transaction i's transfer
+    hides behind transaction i+1's local passes. The overlap-efficiency
+    term models the schedule: ``exposed_fraction = 1/chunks`` of the
+    transpose volume cannot overlap anything (the pipeline has to drain),
+    so ``overlap_efficiency = 1 - 1/chunks`` of it is hidden. The ft
+    verdict gains one energy scalar per extra transaction.
 
     ``real=True`` models the rfft packing trick (``extensions.rfft``):
     the executed C2C transform — and so every collective — runs at the
@@ -840,12 +987,16 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
                 "real input rides the 2-D slab (collective_volume_nd with "
                 "real=True)")
         n = n // 2   # the packed half-length C2C is the whole collective cost
+    chunks = max(1, int(chunks))
     rows = (batch + (2 * groups if ft else 0)) / data_shards
     a2a_local = rows * n * itemsize / shards
     a2a_wire = a2a_local * (shards - 1) / shards
     gather_hlo = batch / data_shards * n * itemsize if natural_order else 0.0
     gather_wire = gather_hlo * (shards - 1) / shards
-    psum_scalars = 3 * groups // data_shards + 1
+    # per-group verdict scalars + one energy scalar per transaction + the
+    # stats-block broadcast on extraction (5 reals per owned group)
+    psum_scalars = 3 * groups // data_shards + chunks \
+        + 5 * groups // data_shards
     psum_hlo = 2.0 * psum_scalars * (itemsize // 2) if ft else 0.0
     psum_wire = psum_hlo * (shards - 1) / shards
     return {
@@ -853,19 +1004,25 @@ def collective_volume(n: int, batch: int, shards: int, *, itemsize: int = 8,
         "data_shards": data_shards,
         "groups": groups,
         "real": real,
+        "chunks": chunks,
         "passes": 2,  # one distributed split -> exactly one transpose
+        "all_to_all_count": chunks,
+        "all_gather_count": 1 if natural_order else 0,
+        "all_to_all_bytes": a2a_local,
         "all_to_all_wire": a2a_wire,
         "gather_wire": gather_wire,
         "psum_wire": psum_wire,
         "total_wire": a2a_wire + gather_wire + psum_wire,
         "hlo_bytes": a2a_local + gather_hlo + psum_hlo,
         "abft_overhead": 2.0 * groups / batch if (ft and batch) else 0.0,
+        "exposed_fraction": 1.0 / chunks,
+        "overlap_efficiency": 1.0 - 1.0 / chunks,
     }
 
 
 def spectral_volume(n: int, batch: int, shards: int, *, kernel_batch: int = 0,
                     itemsize: int = 8, data_shards: int = 1,
-                    real: bool = False) -> dict:
+                    real: bool = False, chunks: int = 1) -> dict:
     """Analytic per-device model of one transposed-order spectral round trip
     (forward -> pointwise -> inverse; see ``core.fft.spectral``).
 
@@ -890,7 +1047,13 @@ def spectral_volume(n: int, batch: int, shards: int, *, kernel_batch: int = 0,
     the kernel rides the imaginary part of ``a + i*v``, so its rows vanish
     from the forward transpose entirely — ``kernel_batch`` is ignored and
     both passes move exactly ``batch / data_shards`` rows.
+
+    ``chunks`` splits the round trip into that many overlapped batch
+    transactions: ``2 * chunks`` all-to-alls carrying the same total bytes
+    (the kernel spectrum rides transaction 0's forward collective only),
+    with ``1/chunks`` of the transpose volume exposed.
     """
+    chunks = max(1, int(chunks))
     rows_fwd = batch / data_shards + (0 if real else kernel_batch)
     rows_inv = batch / data_shards
     fwd_local = rows_fwd * n * itemsize / shards
@@ -900,10 +1063,13 @@ def spectral_volume(n: int, batch: int, shards: int, *, kernel_batch: int = 0,
         "shards": shards,
         "data_shards": data_shards,
         "real": real,
-        "all_to_all_count": 2,
+        "chunks": chunks,
+        "all_to_all_count": 2 * chunks,
         "all_gather_count": 0,
         "all_to_all_wire": wire,
         "gather_wire": 0.0,
         "total_wire": wire,
         "hlo_bytes": fwd_local + inv_local,
+        "exposed_fraction": 1.0 / chunks,
+        "overlap_efficiency": 1.0 - 1.0 / chunks,
     }

@@ -61,7 +61,7 @@ from . import factors
 from .distributed import (_AUTO, EPS, FFT_AXIS, DistFFTResult,
                           _grouped_verdict, _local_fft, _resolve_data_axis,
                           _resolve_mesh, _splice_recomputed, make_dist_plan,
-                          resolve_abft_groups)
+                          resolve_abft_groups, resolve_chunks)
 from .stockham import naive_dft
 
 __all__ = [
@@ -163,7 +163,7 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
                          *, decomp: str = DECOMP_SLAB, itemsize: int = 8,
                          ft: bool = False, groups: int = 1,
                          data_shards: int = 1, natural_order: bool = True,
-                         real: bool = False) -> dict:
+                         real: bool = False, chunks: int = 1) -> dict:
     """Analytic per-device communication model of one distributed n-D
     transform over ``shape`` (cross-checked against the post-partitioning
     HLO by ``benchmarks/fft_distributed.py``).
@@ -195,11 +195,24 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
     path is a composition of two 1-D transforms with no closed-form nd
     model here, so ``real=True`` with ``decomp='pencil'`` raises.
 
+    ``chunks > 1`` (pencil only — the slab pipeline is bulk-synchronous)
+    models the multi-transaction pencil: each digit pass splits into
+    ``chunks`` all-to-alls of ``1/chunks`` the bytes, total volume
+    unchanged, with ``exposed_fraction = 1/chunks`` of the collective
+    latency left unhidden (chunk i's transfer overlaps chunk i+1's local
+    digit FFTs) and ``overlap_efficiency = 1 - 1/chunks``.
+
     ``*_wire`` entries are link-crossing bytes; ``hlo_bytes`` matches
     :func:`repro.launch.dryrun.collective_bytes` on the same program.
     """
     if decomp not in _DECOMPS:
         raise ValueError(f"decomp must be {'|'.join(_DECOMPS)}, got {decomp!r}")
+    chunks = max(1, int(chunks))
+    if chunks > 1 and decomp != DECOMP_PENCIL:
+        raise ValueError(
+            "chunked (multi-transaction) execution rides the pencil digit "
+            "passes; the slab inter-axis transpose is bulk-synchronous — "
+            f"got decomp={decomp!r} with chunks={chunks}")
     if real and decomp != DECOMP_SLAB:
         raise ValueError(
             "the real-input model is slab-only (rfft2 rides the padded "
@@ -227,8 +240,8 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
             raise ValueError("grouped ABFT rides the slab inter-axis "
                              "transpose; decomp='pencil' has no ft model")
         local = batch * grid * itemsize / (d * dd)
-        a2a_count = 2 if dd > 1 else 1
-        a2a_hlo = a2a_count * local
+        a2a_count = (2 if dd > 1 else 1) * chunks
+        a2a_hlo = (2 if dd > 1 else 1) * local
         # the two all-to-alls live on different axes with different fanouts
         a2a_wire = local * (d - 1) / d
         if dd > 1:
@@ -251,8 +264,12 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
         "data_shards": dd,
         "groups": groups,
         "real": real,
+        "chunks": chunks,
+        "exposed_fraction": 1.0 / chunks,
+        "overlap_efficiency": 1.0 - 1.0 / chunks,
         "all_to_all_count": a2a_count,
         "all_gather_count": gather_count,
+        "all_to_all_bytes": a2a_hlo,
         "all_to_all_wire": a2a_wire,
         "gather_wire": gather_wire,
         "psum_wire": psum_wire,
@@ -372,9 +389,24 @@ def _slab_fftn_fn(mesh: Mesh, axis: str, ndim: int, inverse: bool,
 # ---------------------------------------------------------------------------
 
 
+def _chunk_apply(zl, fn, chunks: int, caxes):
+    """Run ``fn`` over ``zl`` in ``chunks`` transactions split along the
+    first axis in ``caxes`` that can carry them (all candidates are
+    unsharded and ``fn`` is independent along each, so contiguous chunks
+    concatenate back bitwise-identically). Falls through to one bulk call
+    when no axis divides."""
+    for ca in caxes:
+        ce = resolve_chunks(zl.shape[ca], chunks)
+        if ce > 1:
+            parts = jnp.split(zl, ce, axis=ca)
+            return jnp.concatenate([fn(p) for p in parts], axis=ca)
+    return fn(zl)
+
+
 @functools.lru_cache(maxsize=None)
 def _pencil_fftn_fn(mesh: Mesh, axis: str, ndim: int, inverse: bool,
-                    natural_order: bool, data_axis: str | None = None):
+                    natural_order: bool, data_axis: str | None = None,
+                    chunks: int = 1):
     """Jitted pencil pipeline: the last two transform axes each run the 1-D
     DistPlan digit decomposition — last over ``axis`` (fft), second-to-last
     over ``data_axis`` — leading transform axes stay local. The cube layout
@@ -384,6 +416,13 @@ def _pencil_fftn_fn(mesh: Mesh, axis: str, ndim: int, inverse: bool,
     never redistributes. ``natural_order=True`` adds the digit restore
     outside the shard_map (GSPMD lowers it to one all-gather per mesh
     axis; see ``collective_volume_nd``).
+
+    ``chunks > 1`` pipelines the distributed passes: the batch — or, for a
+    single rank-3 grid, the leading (local) transform axis, where overlap
+    matters most — splits into that many transactions so transaction i's
+    all-to-alls hide behind transaction i+1's local digit FFTs. The
+    leading-axis FFTs themselves run unchunked (they are local and precede
+    any collective); results are bitwise-identical to the bulk path.
     """
     shards = mesh.shape[axis]
     dsize = mesh.shape[data_axis] if data_axis else 1
@@ -440,21 +479,37 @@ def _pencil_fftn_fn(mesh: Mesh, axis: str, ndim: int, inverse: bool,
                                     concat_axis=a1, tiled=True)
             return _local_axis_fft(zl, a1, inverse=True)
 
+        # chunk candidates: the (replicated) batch axis first, then the
+        # leading local transform axes — the rank-3 single-grid case rides
+        # the first lead axis. All are unsharded and both digit passes are
+        # independent along them, so contiguous chunks are placement-safe.
+        caxes = (0,) + tuple(1 + k for k in range(nl))
+
+        def dist_fwd(zc):
+            """The distributed tail of the forward: both digit passes.
+            Per-transaction when chunked — chunk i's all-to-alls overlap
+            chunk i+1's local digit FFTs."""
+            zc = fwd_pass(zc, axis, ax_c1, ax_c2, tw_c)
+            if dsize > 1:
+                zc = fwd_pass(zc, data_axis, ax_r1, ax_r2, tw_r)
+            else:
+                zc = _local_axis_fft(zc, ax_r1, inverse=False)
+            return zc
+
+        def dist_inv(zc):
+            """The distributed head of the inverse (mirror of dist_fwd)."""
+            if dsize > 1:
+                zc = inv_pass(zc, data_axis, ax_r1, ax_r2, tw_r)
+            else:
+                zc = _local_axis_fft(zc, ax_r1, inverse=True)
+            return inv_pass(zc, axis, ax_c1, ax_c2, tw_c)
+
         def body(zl):
             if not inverse:
                 for k in range(nl):                 # leading axes: local
                     zl = _local_axis_fft(zl, 1 + k, inverse=False)
-                zl = fwd_pass(zl, axis, ax_c1, ax_c2, tw_c)
-                if dsize > 1:
-                    zl = fwd_pass(zl, data_axis, ax_r1, ax_r2, tw_r)
-                else:
-                    zl = _local_axis_fft(zl, ax_r1, inverse=False)
-                return zl
-            if dsize > 1:
-                zl = inv_pass(zl, data_axis, ax_r1, ax_r2, tw_r)
-            else:
-                zl = _local_axis_fft(zl, ax_r1, inverse=True)
-            zl = inv_pass(zl, axis, ax_c1, ax_c2, tw_c)
+                return _chunk_apply(zl, dist_fwd, chunks, caxes)
+            zl = _chunk_apply(zl, dist_inv, chunks, caxes)
             for k in range(nl):
                 zl = _local_axis_fft(zl, 1 + k, inverse=True)
             return zl / int(np.prod(tshape))
@@ -752,7 +807,8 @@ def distributed_fftn(x: jax.Array, mesh: Mesh | None = None, *,
                      ndim: int | None = None, decomp: str = "auto",
                      inverse: bool = False, natural_order: bool = True,
                      axis: str = FFT_AXIS, data_axis: str | None = _AUTO,
-                     interpret: bool | None = None) -> jax.Array:
+                     interpret: bool | None = None,
+                     chunks: int = 1) -> jax.Array:
     """N-D FFT over the last ``ndim`` axes (default: all, capped at 3),
     distributed over ``mesh``. Matches ``jnp.fft.fftn`` conventions.
 
@@ -767,6 +823,13 @@ def distributed_fftn(x: jax.Array, mesh: Mesh | None = None, *,
     local transform; odd / non-power-of-two axes are supported there via
     the direct DFT, and ``interpret`` routes power-of-two axes through the
     Pallas block kernel.
+
+    ``chunks > 1`` (pencil only) splits the batch — or, for a single
+    rank-3 grid, the leading local transform axis — into that many
+    transactions so each chunk's all-to-alls overlap the next chunk's
+    local digit FFTs (see :func:`collective_volume_nd`). The slab and
+    local paths ignore it (bulk-synchronous by construction); results are
+    bitwise-identical for every chunk count.
     """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
@@ -817,7 +880,7 @@ def distributed_fftn(x: jax.Array, mesh: Mesh | None = None, *,
             r1, r2 = tshape[-2], 1
         x = _pencil_to_transposed_cube(x, r1, r2, pc.n1, pc.n2)
     return _pencil_fftn_fn(mesh, axis, ndim, inverse,
-                           bool(natural_order), daxis)(x)
+                           bool(natural_order), daxis, int(chunks))(x)
 
 
 def distributed_fft2(x: jax.Array, mesh: Mesh | None = None,

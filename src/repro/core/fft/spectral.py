@@ -42,7 +42,8 @@ from jax.experimental.shard_map import shard_map
 
 from . import factors
 from .distributed import (_AUTO, FFT_AXIS, _local_fft, _pad_batch_rows,
-                          _resolve_data_axis, _resolve_mesh, make_dist_plan)
+                          _resolve_data_axis, _resolve_mesh, make_dist_plan,
+                          resolve_chunks)
 from .stockham import block_fft_stages, fft as _fft, ifft as _ifft
 
 __all__ = ["fft_convolve", "correlate", "power_spectrum", "conv_spec"]
@@ -84,14 +85,38 @@ def _crop(full, la: int, lv: int, mode: str):
 # ---------------------------------------------------------------------------
 
 
+def _chunk_within_blocks(x, shards: int, ce: int, ci: int):
+    """Chunk ``ci`` of ``x``'s leading rows, taken WITHIN each of the
+    ``shards`` destination blocks of a batch-splitting all-to-all.
+
+    The inverse's a2a sends block e (rows ``[e*B/D, (e+1)*B/D)``) to device
+    e; a chunk that took contiguous rows would land device d with a
+    permutation of the bulk path's rows. Striding the selection — sub-rows
+    ``[ci*w, (ci+1)*w)`` of EVERY block — keeps each device's chunks landing
+    in bulk order, so concatenating chunk outputs reproduces the
+    bulk-synchronous result bitwise.
+    """
+    blk = x.shape[0] // shards
+    w = blk // ce
+    blocks = x.reshape((shards, blk) + x.shape[1:])
+    return blocks[:, ci * w:(ci + 1) * w].reshape((-1,) + x.shape[1:])
+
+
 @functools.lru_cache(maxsize=None)
 def _spectral_pair_fn(mesh: Mesh, axis: str, data_axis: str | None,
-                      conj_kernel: bool):
+                      conj_kernel: bool, chunks: int = 1):
     """forward(a, v) -> pointwise product -> inverse, one shard_map body.
 
     Keeping everything in a single body is what pins the collective count:
     the kernel's forward transform shares the batch all-to-all with the
     signals', and no intermediate ever leaves the pencil layout.
+
+    ``chunks > 1`` splits the round trip into that many overlapped batch
+    transactions (``2 * chunks`` all-to-alls, same total bytes): chunk i's
+    collectives hide behind chunk i+1's local Stockham passes. A broadcast
+    kernel transforms once — it rides transaction 0's forward collective
+    and its spectrum is reused by every later chunk. Results are
+    bitwise-identical to the bulk path for every chunk count.
     """
     shards = mesh.shape[axis]
     dsize = mesh.shape[data_axis] if data_axis else 1
@@ -121,32 +146,62 @@ def _spectral_pair_fn(mesh: Mesh, axis: str, data_axis: str | None,
             d = jax.lax.axis_index(axis)
             ba = al.shape[0]
             n2l = al.shape[-1]
-            # ---- forward, both operands stacked: ONE all-to-all ----------
-            zc = jnp.concatenate([al, vl], axis=0)
-            zc = jnp.swapaxes(zc, -1, -2)
-            zc = block_fft_stages(zc, inverse=False)     # FFT over n1
-            zc = jnp.swapaxes(zc, -1, -2)
-            twl = jax.lax.dynamic_slice_in_dim(tw_f, d * n2l, n2l, axis=1)
-            zc = zc * twl
-            zc = jax.lax.all_to_all(zc, axis, split_axis=1, concat_axis=2,
-                                    tiled=True)          # (BA+BK, n1/D, n2)
-            zc = _local_fft(zc, inverse=False)           # FFT over n2
-            # ---- pointwise in transposed order (shard-local) -------------
-            ya, yv = zc[:ba], zc[ba:]
-            if conj_kernel:
-                yv = jnp.conj(yv)
-            prod = ya * yv                               # BK==1 broadcasts
-            # ---- inverse from transposed order: batch-split a2a ----------
-            prod = _local_fft(prod, inverse=True)        # IFFT over k2
-            n1l = prod.shape[-2]
-            twi = jax.lax.dynamic_slice_in_dim(tw_i, d * n1l, n1l, axis=0)
-            prod = prod * twi
-            prod = jax.lax.all_to_all(prod, axis, split_axis=0, concat_axis=1,
-                                      tiled=True)        # (BA/D, n1, n2)
-            prod = jnp.swapaxes(prod, -1, -2)
-            prod = _local_fft(prod, inverse=True)        # IFFT over k1
-            prod = jnp.swapaxes(prod, -1, -2)            # natural (n1, n2)
-            return prod.reshape(prod.shape[0], n) / n
+
+            def fwd(zc):
+                # stacked rows -> transposed spectra: ONE all-to-all
+                zc = jnp.swapaxes(zc, -1, -2)
+                zc = block_fft_stages(zc, inverse=False)  # FFT over n1
+                zc = jnp.swapaxes(zc, -1, -2)
+                twl = jax.lax.dynamic_slice_in_dim(tw_f, d * n2l, n2l,
+                                                   axis=1)
+                zc = zc * twl
+                zc = jax.lax.all_to_all(zc, axis, split_axis=1,
+                                        concat_axis=2,
+                                        tiled=True)      # (.., n1/D, n2)
+                return _local_fft(zc, inverse=False)     # FFT over n2
+
+            def inv(prod):
+                # transposed product -> natural time domain: batch-split a2a
+                prod = _local_fft(prod, inverse=True)    # IFFT over k2
+                n1l = prod.shape[-2]
+                twi = jax.lax.dynamic_slice_in_dim(tw_i, d * n1l, n1l,
+                                                   axis=0)
+                prod = prod * twi
+                prod = jax.lax.all_to_all(prod, axis, split_axis=0,
+                                          concat_axis=1,
+                                          tiled=True)    # (BA/D, n1, n2)
+                prod = jnp.swapaxes(prod, -1, -2)
+                prod = _local_fft(prod, inverse=True)    # IFFT over k1
+                prod = jnp.swapaxes(prod, -1, -2)        # natural (n1, n2)
+                return prod.reshape(prod.shape[0], n) / n
+
+            def product(ya, yv):
+                if conj_kernel:
+                    yv = jnp.conj(yv)
+                return ya * yv                           # BK==1 broadcasts
+
+            ce = resolve_chunks(ba // shards, chunks)
+            if ce == 1:
+                zc = fwd(jnp.concatenate([al, vl], axis=0))
+                return inv(product(zc[:ba], zc[ba:]))
+            per_signal = vl.shape[0] == ba
+            outs, yv = [], None
+            for ci in range(ce):
+                ac = _chunk_within_blocks(al, shards, ce, ci)
+                if per_signal:
+                    vc = _chunk_within_blocks(vl, shards, ce, ci)
+                    zc = fwd(jnp.concatenate([ac, vc], axis=0))
+                    ya, yvc = zc[:ac.shape[0]], zc[ac.shape[0]:]
+                elif yv is None:
+                    # broadcast kernel: spectrum computed once, rides
+                    # transaction 0's forward collective
+                    zc = fwd(jnp.concatenate([ac, vl], axis=0))
+                    ya, yv = zc[:ac.shape[0]], zc[ac.shape[0]:]
+                    yvc = yv
+                else:
+                    ya, yvc = fwd(ac), yv
+                outs.append(inv(product(ya, yvc)))
+            return jnp.concatenate(outs, axis=0)  # rows land in bulk order
 
         out = shard_map(
             body, mesh=mesh,
@@ -159,13 +214,15 @@ def _spectral_pair_fn(mesh: Mesh, axis: str, data_axis: str | None,
 
 
 @functools.lru_cache(maxsize=None)
-def _spectral_real_fn(mesh: Mesh, axis: str, data_axis: str | None):
+def _spectral_real_fn(mesh: Mesh, axis: str, data_axis: str | None,
+                      chunks: int = 1):
     """forward(p) -> p*p -> inverse for ONE packed operand ``p = a + i*v``.
 
     Same transposed round trip as :func:`_spectral_pair_fn` but the kernel
     rides the imaginary part instead of stacked batch rows, so the forward
     all-to-all moves exactly the signal rows — no kernel payload at all.
     The caller takes ``imag(.) / 2`` of the natural-order circular product.
+    ``chunks`` pipelines the batch exactly as in the pair path.
     """
     shards = mesh.shape[axis]
     dsize = mesh.shape[data_axis] if data_axis else 1
@@ -191,28 +248,41 @@ def _spectral_real_fn(mesh: Mesh, axis: str, data_axis: str | None):
         def body(zl):
             d = jax.lax.axis_index(axis)
             n2l = zl.shape[-1]
-            # ---- forward: one packed operand, ONE all-to-all -------------
-            zl = jnp.swapaxes(zl, -1, -2)
-            zl = block_fft_stages(zl, inverse=False)     # FFT over n1
-            zl = jnp.swapaxes(zl, -1, -2)
-            twl = jax.lax.dynamic_slice_in_dim(tw_f, d * n2l, n2l, axis=1)
-            zl = zl * twl
-            zl = jax.lax.all_to_all(zl, axis, split_axis=1, concat_axis=2,
-                                    tiled=True)          # (B, n1/D, n2)
-            zl = _local_fft(zl, inverse=False)           # FFT over n2
-            # ---- pointwise self-product in transposed order --------------
-            prod = zl * zl                               # P[k]^2, any order
-            # ---- inverse from transposed order: batch-split a2a ----------
-            prod = _local_fft(prod, inverse=True)        # IFFT over k2
-            n1l = prod.shape[-2]
-            twi = jax.lax.dynamic_slice_in_dim(tw_i, d * n1l, n1l, axis=0)
-            prod = prod * twi
-            prod = jax.lax.all_to_all(prod, axis, split_axis=0, concat_axis=1,
-                                      tiled=True)        # (B/D, n1, n2)
-            prod = jnp.swapaxes(prod, -1, -2)
-            prod = _local_fft(prod, inverse=True)        # IFFT over k1
-            prod = jnp.swapaxes(prod, -1, -2)            # natural (n1, n2)
-            return prod.reshape(prod.shape[0], n) / n
+
+            def round_trip(zc):
+                # ---- forward: one packed operand, ONE all-to-all ---------
+                zc = jnp.swapaxes(zc, -1, -2)
+                zc = block_fft_stages(zc, inverse=False)  # FFT over n1
+                zc = jnp.swapaxes(zc, -1, -2)
+                twl = jax.lax.dynamic_slice_in_dim(tw_f, d * n2l, n2l,
+                                                   axis=1)
+                zc = zc * twl
+                zc = jax.lax.all_to_all(zc, axis, split_axis=1,
+                                        concat_axis=2,
+                                        tiled=True)      # (B, n1/D, n2)
+                zc = _local_fft(zc, inverse=False)       # FFT over n2
+                # ---- pointwise self-product in transposed order ----------
+                prod = zc * zc                           # P[k]^2, any order
+                # ---- inverse from transposed order: batch-split a2a ------
+                prod = _local_fft(prod, inverse=True)    # IFFT over k2
+                n1l = prod.shape[-2]
+                twi = jax.lax.dynamic_slice_in_dim(tw_i, d * n1l, n1l,
+                                                   axis=0)
+                prod = prod * twi
+                prod = jax.lax.all_to_all(prod, axis, split_axis=0,
+                                          concat_axis=1,
+                                          tiled=True)    # (B/D, n1, n2)
+                prod = jnp.swapaxes(prod, -1, -2)
+                prod = _local_fft(prod, inverse=True)    # IFFT over k1
+                prod = jnp.swapaxes(prod, -1, -2)        # natural (n1, n2)
+                return prod.reshape(prod.shape[0], n) / n
+
+            ce = resolve_chunks(zl.shape[0] // shards, chunks)
+            if ce == 1:
+                return round_trip(zl)
+            return jnp.concatenate(
+                [round_trip(_chunk_within_blocks(zl, shards, ce, ci))
+                 for ci in range(ce)], axis=0)
 
         out = shard_map(
             body, mesh=mesh,
@@ -234,19 +304,21 @@ def _pad_tail(x, n: int):
 
 
 def _spectral_pair(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
-                   out_len: int):
+                   out_len: int, chunks: int = 1):
     """Shared driver: pad, dispatch local vs fused sharded path, crop.
 
     Returns the length ``out_len`` head of the circular product's inverse
     (linear results need nfft >= la + lv - 1, which callers guarantee).
     Two real operands take the packed single-transform path
     (:func:`_spectral_real`); any complex operand takes the stacked pair.
+    ``chunks`` pipelines the sharded round trip (see
+    :func:`_spectral_pair_fn`); the local path ignores it.
     """
     cdtype, real = _result_dtypes(a, v)
     if real:
         return _spectral_real(a, v, mesh, axis, data_axis,
                               conj_kernel=conj_kernel, out_len=out_len,
-                              cdtype=cdtype)
+                              cdtype=cdtype, chunks=chunks)
     a = jnp.asarray(a, cdtype)
     v = jnp.asarray(v, cdtype)
     mesh = _resolve_mesh(mesh, axis)
@@ -273,14 +345,15 @@ def _spectral_pair(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
     a2d, _ = _pad_batch_rows(a2d, dsize, shards)
     if bk == b:
         v2d, _ = _pad_batch_rows(v2d, dsize, shards)
-    out = _spectral_pair_fn(mesh, axis, daxis, conj_kernel)(a2d, v2d)
+    out = _spectral_pair_fn(mesh, axis, daxis, conj_kernel,
+                            int(chunks))(a2d, v2d)
     if out.shape[0] != b:
         out = out[:b]
     return out[..., :out_len].reshape(lead + (out_len,))
 
 
 def _spectral_real(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
-                   out_len: int, cdtype):
+                   out_len: int, cdtype, chunks: int = 1):
     """Circular product of two REAL operands via ONE packed transform.
 
     ``ifft(fft(a + i*v)^2) = a(.)a - v(.)v + 2i (a(.)v)``, so the circular
@@ -307,7 +380,7 @@ def _spectral_real(a, v, mesh, axis, data_axis, *, conj_kernel: bool,
     p2d = p.reshape((-1, n))
     b = p2d.shape[0]
     p2d, _ = _pad_batch_rows(p2d, dsize, shards)
-    out = _spectral_real_fn(mesh, axis, daxis)(p2d)
+    out = _spectral_real_fn(mesh, axis, daxis, int(chunks))(p2d)
     if out.shape[0] != b:
         out = out[:b]
     out = jnp.imag(out) * 0.5
@@ -330,12 +403,15 @@ def _conv_nfft(la: int, lv: int, mesh, axis: str) -> int:
 
 
 def conv_spec(a, v, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
-              data_axis: str | None = _AUTO):
+              data_axis: str | None = _AUTO, chunks: int = 1):
     """The :class:`~repro.core.fft.api.FFTSpec` of the padded C2C transform
     one convolution/correlation of ``a`` with ``v`` runs: last axis padded
     to :func:`_conv_nfft`, batch dims from ``a``, compute dtype promoted
     across both operands. Build it once and reuse
-    ``plan(spec).convolve/correlate`` on serve traffic.
+    ``plan(spec).convolve/correlate`` on serve traffic. ``chunks`` is the
+    multi-transaction overlap knob (see :class:`~repro.core.fft.api
+    .FFTSpec`): the spectral round trip splits into that many transactions
+    per all-to-all.
     """
     from . import api
 
@@ -345,7 +421,8 @@ def conv_spec(a, v, mesh: Mesh | None = None, *, axis: str = FFT_AXIS,
     nfft = _conv_nfft(a.shape[-1], v.shape[-1], mesh, axis)
     return api.FFTSpec(shape=a.shape[:-1] + (nfft,),
                        dtype=jnp.dtype(cdtype).name, rank=1, mesh=mesh,
-                       axis=axis, data_axis=data_axis, real=real)
+                       axis=axis, data_axis=data_axis, real=real,
+                       chunks=chunks)
 
 
 def fft_convolve(a, v, mesh: Mesh | None = None, *, mode: str = "full",

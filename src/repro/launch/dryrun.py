@@ -60,7 +60,7 @@ CANONICAL = {
 COLLECTIVE_RE = re.compile(
     r"=\s*(?:\(.*?\)|[a-z0-9\[\]{},\s/]*?)\s*"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
+    r"(-start)?\(")
 SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|c64|c128)"
                       r"\[([0-9,]*)\]")
 DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
@@ -70,37 +70,51 @@ WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                "all-to-all": 1.0, "collective-permute": 1.0}
 
 
-def _shape_bytes(line: str, op: str) -> int:
+def _shape_bytes(line: str, op: str, *, is_start: bool = False) -> int:
     # result type sits between ' = ' and the op name:
     #   %x = f32[64,128]{1,0} all-reduce(...)
     #   %y = (f32[8]{0}, f32[8]{0}) all-gather-start(...)
+    # Async ``-start`` results are (operand buffers..., result buffers...)
+    # tuples — the operand aliases duplicate the payload, so only the result
+    # half of the tuple is transferred. Sync decomposed all-to-alls also
+    # return tuples, but there every element IS payload: no dedupe.
     seg = line.split(" = ", 1)[1] if " = " in line else line
     seg = seg.split(op, 1)[0]
-    total = 0
+    sizes = []
     for m in SHAPE_RE.finditer(seg):
         dt, dims = m.group(1), m.group(2)
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * DTYPE_BYTES[dt]
-    return total
+        sizes.append(n * DTYPE_BYTES[dt])
+    if is_start and len(sizes) > 1:
+        sizes = sizes[len(sizes) // 2:]
+    return sum(sizes)
 
 
 def collective_bytes(hlo_text: str) -> dict:
     """Per-device wire bytes by collective kind, parsed from the
-    post-partitioning HLO (the module is the per-device program)."""
+    post-partitioning HLO (the module is the per-device program).
+
+    Returns ``bytes`` / ``count`` keyed by kind, the scalar ``total_bytes``,
+    and ``ops`` — one ``(kind, wire_bytes)`` entry per collective in program
+    order, so callers can reason about individual transactions (e.g. the
+    exposed-communication fraction of a chunked pipeline)."""
     out = {k: 0.0 for k in WIRE_FACTOR}
     count = {k: 0 for k in WIRE_FACTOR}
+    ops = []
     for line in hlo_text.splitlines():
         m = COLLECTIVE_RE.search(line)
         if not m:
             continue
         kind = m.group(1)
-        b = _shape_bytes(line, kind)
-        out[kind] += b * WIRE_FACTOR[kind]
+        b = _shape_bytes(line, kind, is_start=m.group(2) is not None)
+        wire = b * WIRE_FACTOR[kind]
+        out[kind] += wire
         count[kind] += 1
-    return {"bytes": out, "count": count,
+        ops.append((kind, wire))
+    return {"bytes": out, "count": count, "ops": ops,
             "total_bytes": float(sum(out.values()))}
 
 

@@ -95,7 +95,8 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
                    group_size: int | None = None,
                    recompute_uncorrectable: bool = True,
                    natural_order: bool | None = None,
-                   dtype="complex64", real: bool = False):
+                   dtype="complex64", real: bool = False,
+                   chunks: int = 1):
     """Resolve one serving request description into the
     :class:`~repro.core.fft.api.FFTSpec` its plan is built from.
 
@@ -114,6 +115,12 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
     executors, ``op="spectrum"`` the one-sided periodogram, and
     convolve/correlate ride the packed real pipelines — roughly half the
     C2C collective bytes on a mesh. Real plans are natural-order only.
+
+    ``chunks`` (``--fft-spec "chunks=4"`` or ``"chunks=auto"``) is the
+    multi-transaction overlap knob: the plan splits the batch into that
+    many transactions so each transaction's all-to-all hides behind the
+    next one's local Stockham passes (0 = auto; see
+    :class:`~repro.core.fft.api.FFTSpec`).
     """
     from repro.core.fft import api, multidim, spectral
 
@@ -168,7 +175,7 @@ def build_fft_spec(shape, *, mesh=None, op: str = "fft",
                        dtype=jnp.dtype(dtype).name, rank=dims, mesh=mesh,
                        axis="fft", decomp="auto" if dims == 1 else decomp,
                        natural_order=bool(natural_order), ft=ft_cfg,
-                       real=bool(real))
+                       real=bool(real), chunks=int(chunks))
 
 
 def _ft_telemetry(plan, res, info):
@@ -202,6 +209,8 @@ def serve_plan(plan, x, *, op: str = "fft", kernel=None, mode: str = "same"):
     """
     x = jnp.asarray(x)
     info = {"shards": plan.shards, "data": plan.dsize, "op": op}
+    if plan.chunks > 1:
+        info["chunks"] = plan.chunks
     if plan.rank == 2:
         info["dims"] = 2
         info["decomp"] = plan.decomp
@@ -251,7 +260,8 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
               natural_order: bool | None = None,
               groups: int | None = None, group_size: int | None = None,
               recompute_uncorrectable: bool = True,
-              dims: int = 1, decomp: str = "auto", real: bool = False):
+              dims: int = 1, decomp: str = "auto", real: bool = False,
+              chunks: int = 1):
     """Batched sharded FFT endpoint: one request = one (B, N) batch
     (``dims=2``: one (B, R, C) grid batch).
 
@@ -294,8 +304,19 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
         decomp=decomp, ft=ft, threshold=threshold, groups=groups,
         group_size=group_size,
         recompute_uncorrectable=recompute_uncorrectable,
-        natural_order=natural_order, dtype=dt, real=real)
+        natural_order=natural_order, dtype=dt, real=real, chunks=chunks)
     return serve_plan(api.plan(spec), x, op=op, kernel=kernel, mode=mode)
+
+
+def _parse_chunks(v: str) -> int:
+    """``chunks=`` values: a transaction count, or ``auto`` (-> 0, the
+    plan-resolved choice from the collective-volume model)."""
+    if v.strip().lower() == "auto":
+        return 0
+    c = int(v)
+    if c < 0:
+        raise ValueError(f"chunks must be >= 0 (0 = auto), got {c}")
+    return c
 
 
 _SPEC_KEYS = {
@@ -307,7 +328,7 @@ _SPEC_KEYS = {
     "decomp": ("fft_decomp", str), "ft": ("ft", None),
     "groups": ("fft_groups", int), "kernel_n": ("fft_kernel_n", int),
     "transposed": ("transposed", None), "threshold": ("fft_threshold", float),
-    "real": ("fft_real", None),
+    "real": ("fft_real", None), "chunks": ("fft_chunks", _parse_chunks),
 }
 
 
@@ -323,17 +344,31 @@ def apply_fft_spec_arg(args, s: str):
     """Apply a consolidated ``--fft-spec "n=65536,batch=8,shards=4,ft=1"``
     string onto the parsed args — one flag describing the whole worker
     plan; the individual ``--fft-*`` flags remain as sugar and provide the
-    defaults the spec string overrides."""
-    for item in s.split(","):
+    defaults the spec string overrides.
+
+    The string is validated strictly: an empty segment (a stray comma, as
+    in ``"n=8,,n=16"``) and a repeated key both raise ``ValueError`` naming
+    the offending segment — a worker must not start from a plan description
+    that silently dropped or last-won half of what the operator wrote."""
+    seen: set[str] = set()
+    for pos, item in enumerate(s.split(","), 1):
         item = item.strip()
         if not item:
-            continue
+            raise ValueError(
+                f"--fft-spec: empty segment at position {pos} of {s!r} — "
+                f"drop the stray comma")
         k, _, v = item.partition("=")
         k = k.strip()
         if k not in _SPEC_KEYS:
             raise SystemExit(
                 f"--fft-spec: unknown key {k!r} (valid: "
                 f"{', '.join(sorted(_SPEC_KEYS))})")
+        if k in seen:
+            raise ValueError(
+                f"--fft-spec: duplicate key {k!r} (segment {pos}: {item!r} "
+                f"in {s!r}) — each key may appear once; last-wins would "
+                f"silently mask which value the worker plans with")
+        seen.add(k)
         dest, parse = _SPEC_KEYS[k]
         setattr(args, dest, _parse_bool(v) if parse is None else parse(v))
     return args
@@ -372,7 +407,7 @@ def _main_fft(args):
         dims=args.fft_dims, decomp=args.fft_decomp, ft=args.ft,
         threshold=args.fft_threshold, groups=args.fft_groups,
         natural_order=False if args.transposed else None,
-        real=args.fft_real)
+        real=args.fft_real, chunks=args.fft_chunks)
     p = api.plan(spec)
     print(f"# {p}")
     call = lambda: serve_plan(p, x, op=args.fft_op, kernel=kernel)
@@ -450,6 +485,12 @@ def main():
                          "group); default: one group per data shard")
     ap.add_argument("--fft-threshold", type=float, default=1e-4,
                     help="ABFT detection threshold")
+    ap.add_argument("--fft-chunks", type=_parse_chunks, default=1,
+                    help="multi-transaction overlap: split the batch into "
+                         "this many chunked all-to-all transactions (each "
+                         "one's collective hides behind the next one's "
+                         "local Stockham passes); 'auto' lets the plan "
+                         "pick from the collective-volume model")
     ap.add_argument("--fft-spec", default=None,
                     help="consolidated plan description, e.g. "
                          "'n=65536,batch=8,shards=4,data=2,ft=1,groups=4' "

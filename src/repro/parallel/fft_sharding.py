@@ -14,12 +14,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.fft.distributed import (DATA_AXIS, FFT_AXIS, make_dist_plan,
-                                        resolve_abft_groups)
+                                        resolve_abft_groups, resolve_chunks)
 
 __all__ = ["fft_mesh_axis", "infer_fft_mesh", "pencil_specs",
            "shard_signals", "data_mesh_axis", "abft_group_layout",
-           "abft_group_spec", "slab_specs", "pencil_nd_specs", "shard_grid",
-           "layout_specs", "half_spectrum_shape"]
+           "abft_group_spec", "chunk_layout", "slab_specs",
+           "pencil_nd_specs", "shard_grid", "layout_specs",
+           "half_spectrum_shape"]
 
 
 def fft_mesh_axis(mesh: Mesh | None, axis: str = FFT_AXIS) -> str | None:
@@ -54,6 +55,35 @@ def abft_group_layout(mesh: Mesh | None, batch: int, *,
     g = resolve_abft_groups(batch, groups=groups, group_size=group_size,
                             data_shards=dsize)
     return g, batch // g
+
+
+def chunk_layout(mesh: Mesh | None, batch: int, chunks: int, *,
+                 groups: int | None = None,
+                 data_axis: str = DATA_AXIS) -> tuple[int, int]:
+    """Resolve the multi-transaction layout for ``batch`` signals on
+    ``mesh``: how many chunked transactions the pipeline will actually run
+    and how many per-device rows each carries.
+
+    Returns ``(C, rows_per_transaction)``. Mirrors the resolution inside
+    the chunked pipelines (``resolve_chunks`` over the per-device row
+    count): the batch rows resident on one data shard split into ``C``
+    contiguous transactions — whole checksum groups when ``groups`` is set
+    (the ft path chunks group-wise so every transaction keeps its own
+    verdict psum). Callers (serve, benchmarks) use this to size overlap
+    telemetry up front, like :func:`abft_group_layout` does for ABFT.
+    """
+    d = data_mesh_axis(mesh, data_axis)
+    dsize = mesh.shape[d] if d else 1
+    if dsize > 1 and batch % dsize:
+        dsize = 1                      # indivisible batch replicates
+    rows = (groups if groups is not None else batch) // dsize
+    if groups is not None and (groups % dsize or batch % groups):
+        raise ValueError(
+            f"groups={groups} must divide batch={batch} and spread over "
+            f"data={dsize} — resolve with abft_group_layout first")
+    c = resolve_chunks(rows, max(1, int(chunks))) if rows else 1
+    per = (rows // c) * (batch // groups if groups is not None else 1)
+    return c, per
 
 
 def abft_group_spec(mesh: Mesh | None, data_axis: str = DATA_AXIS) -> P:

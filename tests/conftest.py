@@ -27,6 +27,22 @@ ATOL = {
 }
 
 
+@pytest.fixture(autouse=True)
+def _fresh_deprecation_warnings():
+    """Reset the one-shot FFT kwarg deprecation registry around every test.
+
+    The registry is module-global (so real programs warn once per call
+    site), which made warning assertions order-dependent across the suite:
+    whichever test tripped a legacy path first swallowed everyone else's
+    warning. Resetting per test makes each test observe its own first use.
+    """
+    from repro.core.fft.api import reset_deprecation_warnings
+
+    reset_deprecation_warnings()
+    yield
+    reset_deprecation_warnings()
+
+
 @pytest.fixture
 def rng(request) -> np.random.Generator:
     """Per-test deterministic generator, seeded from the test's nodeid."""

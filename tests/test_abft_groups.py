@@ -74,8 +74,9 @@ def test_abft_group_layout_without_mesh():
 
 
 def test_collective_volume_grouped():
-    """Checksum rows scale as 2G/B; the verdict psum is 3 scalars per
-    locally-owned group plus one shared energy scalar."""
+    """Checksum rows scale as 2G/B; the verdict traffic is 8 scalars per
+    locally-owned group (3 verdict-psum + 5 replicated-stats broadcast)
+    plus one shared energy scalar."""
     from repro.core.fft.distributed import collective_volume
 
     n, b, d = 1 << 17, 8, 4
@@ -86,9 +87,12 @@ def test_collective_volume_grouped():
     assert g4["abft_overhead"] == pytest.approx(8 / b)
     assert g4["all_to_all_wire"] == pytest.approx(
         plain["all_to_all_wire"] * (b + 8) / b)
-    # psum payload: (3G + 1) real scalars at ring factor 2
+    # psum payload: (8G + 1) real scalars at ring factor 2 — the 5G
+    # stats-broadcast term is the masked all-reduce XLA emits for the
+    # replicated telemetry extraction (the traffic the old model hid
+    # behind an absolute 512-byte slack floor)
     assert g4["psum_wire"] - g1["psum_wire"] == pytest.approx(
-        2.0 * 9 * 4 * (d - 1) / d)
+        2.0 * 24 * 4 * (d - 1) / d)
     # data sharding divides rows, gather, and per-device verdict scalars
     half = collective_volume(n, b, d, ft=True, groups=4, data_shards=2)
     assert half["all_to_all_wire"] == pytest.approx(

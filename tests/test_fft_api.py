@@ -288,7 +288,7 @@ def test_ops_kwargs_deprecated_but_working(crand):
     from repro.kernels import ops
     mesh = _mesh1()
     x = jnp.asarray(crand(4, 4096))
-    api._warned_entries.clear()
+    api.reset_deprecation_warnings()
     with pytest.warns(api.FFTKwargDeprecationWarning):
         y = ops.fft(x, mesh=mesh)
     want = plan(FFTSpec(shape=(4, 4096), mesh=mesh)).fft(x)
@@ -303,6 +303,34 @@ def test_ops_kwargs_deprecated_but_working(crand):
         _w.simplefilter("error", api.FFTKwargDeprecationWarning)
         ops.fft(x[:2, :256])
         ops.fft(x[:2, :256], mesh=None, axis="fft", natural_order=True)
+
+
+def test_deprecation_warnings_resettable(crand):
+    """Regression: the one-shot registry must be resettable — two isolated
+    invocations (reset between, as the autouse fixture does per test) BOTH
+    warn. Before ``reset_deprecation_warnings`` the module-global set made
+    the second invocation permanently silent, so warning assertions passed
+    or failed depending on suite order."""
+    _need(4)
+    from repro.kernels import ops
+    mesh = _mesh1()
+    x = jnp.asarray(crand(4, 4096))
+
+    def legacy_call():                 # ONE call site, invoked repeatedly
+        return ops.fft(x, mesh=mesh)
+
+    for _ in range(2):                 # isolated invocation = fresh registry
+        api.reset_deprecation_warnings()
+        with pytest.warns(api.FFTKwargDeprecationWarning):
+            legacy_call()
+        # one-shot within an invocation: same call site stays silent
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error", api.FFTKwargDeprecationWarning)
+            legacy_call()
+    # distinct entry points are distinct keys: ifft still warns after fft
+    with pytest.warns(api.FFTKwargDeprecationWarning):
+        ops.ifft(x, mesh=mesh)
 
 
 def test_ops_auto_dispatch_still_silent(crand):

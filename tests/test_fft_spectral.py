@@ -83,9 +83,10 @@ def test_spectral_volume_model():
 
 
 def test_collective_volume_psum_tracks_itemsize():
-    """The ABFT verdict psum is 3 scalars per checksum group plus one shared
-    energy scalar, in the input's REAL dtype: f64 for complex128 — the model
-    must scale with both the group count and the itemsize."""
+    """The ABFT verdict traffic is 8 scalars per checksum group (3
+    verdict-psum + 5 replicated-stats broadcast) plus one shared energy
+    scalar, in the input's REAL dtype: f64 for complex128 — the model must
+    scale with both the group count and the itemsize."""
     from repro.core.fft.distributed import collective_volume
 
     n, b, d = 1 << 14, 8, 4
@@ -98,15 +99,15 @@ def test_collective_volume_psum_tracks_itemsize():
                                   itemsize=itemsize)
         return ft["hlo_bytes"] - plain["hlo_bytes"]
 
-    assert psum_bytes(8) == pytest.approx(2.0 * 4 * 4)
-    assert psum_bytes(16) == pytest.approx(2.0 * 4 * 8)  # pre-fix: f32-sized
-    assert psum_bytes(8, groups=4) == pytest.approx(2.0 * 13 * 4)
+    assert psum_bytes(8) == pytest.approx(2.0 * 9 * 4)
+    assert psum_bytes(16) == pytest.approx(2.0 * 9 * 8)  # pre-fix: f32-sized
+    assert psum_bytes(8, groups=4) == pytest.approx(2.0 * 33 * 4)
     # grouped + data-sharded: each device psums only its own groups' stats
     half = collective_volume(n, b, d, ft=True, natural_order=False,
                              groups=4, data_shards=2)
     full = collective_volume(n, b, d, ft=True, natural_order=False, groups=4)
     assert half["psum_wire"] == pytest.approx(
-        2.0 * 7 * 4 * (d - 1) / d)
+        2.0 * 17 * 4 * (d - 1) / d)
     assert half["all_to_all_wire"] == pytest.approx(
         full["all_to_all_wire"] / 2)
 

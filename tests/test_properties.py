@@ -54,6 +54,34 @@ def test_property_group_count_invariance(g, ln, seed):
     assert np.array_equal(np.asarray(base.y), np.asarray(res.y))
 
 
+# hypothesis: the chunked multi-transaction pipeline is an execution
+# schedule, not a numerical change — ANY chunk count C (feasible or not:
+# infeasible requests clamp) leaves the transform output bitwise identical
+# to the bulk pipeline, in both digit orders, and the chunked grouped-ABFT
+# path flags nothing on clean inputs
+@settings(max_examples=12, deadline=None)
+@given(c=st.integers(1, 8), ln=st.integers(8, 10),
+       natural=st.booleans(), seed=st.integers(0, 2 ** 16))
+def test_property_chunk_count_invariance(c, ln, natural, seed):
+    import jax
+
+    from repro.core.fft.distributed import (distributed_fft,
+                                            ft_distributed_fft)
+
+    mesh = jax.make_mesh((1,), ("fft",))
+    rng = np.random.default_rng(seed)
+    b, n = 8, 1 << ln
+    x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))
+         ).astype(np.complex64)
+    base = distributed_fft(x, mesh, natural_order=natural)
+    y = distributed_fft(x, mesh, natural_order=natural, chunks=c)
+    assert np.array_equal(np.asarray(base), np.asarray(y))
+    ft_base = ft_distributed_fft(x, mesh, groups=4)
+    ft_res = ft_distributed_fft(x, mesh, groups=4, chunks=c)
+    assert not bool(ft_res.flagged.any()), np.asarray(ft_res.group_score)
+    assert np.array_equal(np.asarray(ft_base.y), np.asarray(ft_res.y))
+
+
 # hypothesis: inject -> detect -> correct round trip. Any single SEU above
 # the noise floor lands in exactly one group, decodes correctable at the
 # right global signal, and the corrected output matches the fault-free run
