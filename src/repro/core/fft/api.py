@@ -45,7 +45,7 @@ from .distributed import (_AUTO, FFT_AXIS, _resolve_data_axis, _resolve_mesh,
                           resolve_abft_groups, resolve_chunks)
 
 __all__ = ["FFTSpec", "FTConfig", "FFTPlan", "plan", "spec_for",
-           "plan_cache_info", "plan_cache_clear",
+           "plan_cache_info", "plan_cache_clear", "plan_cache_keys",
            "FFTKwargDeprecationWarning", "reset_deprecation_warnings"]
 
 _COMPLEX_DTYPES = ("complex64", "complex128")
@@ -891,3 +891,4 @@ def plan(spec: FFTSpec) -> FFTPlan:
 # aliases keep the historical FFT-side spelling working
 plan_cache_info = planbase.plan_cache_info
 plan_cache_clear = planbase.plan_cache_clear
+plan_cache_keys = planbase.plan_cache_keys

@@ -24,11 +24,13 @@ and only pay for what they use.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import threading
 
 __all__ = ["FTConfig", "Plan", "plan", "register_plan_type",
-           "plan_cache_info", "plan_cache_clear"]
+           "plan_cache_info", "plan_cache_clear", "plan_cache_keys"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,16 +109,60 @@ def register_plan_type(spec_cls: type, plan_cls: type[Plan] | None = None):
     return plan_cls
 
 
-@functools.lru_cache(maxsize=512)
+# The shared plan cache. Serving traffic hits plan() concurrently from a
+# worker pool, so the cache is explicitly thread-safe: the miss path is
+# guarded by per-spec in-flight events — when N threads race on the SAME
+# new spec, exactly one constructs the plan (one plan object, one set of
+# jit traces) and the rest block until it lands in the cache; threads
+# building DISTINCT specs construct concurrently. ``functools.lru_cache``
+# only serializes its bookkeeping, not the miss-path construction, which
+# is where duplicate plans and duplicate traces came from.
+_CACHE_MAXSIZE = 512
+_cache: "collections.OrderedDict[object, Plan]" = collections.OrderedDict()
+_inflight: dict[object, threading.Event] = {}
+_cache_lock = threading.Lock()
+_hits = 0
+_misses = 0
+
+
 def _plan_cached(spec) -> Plan:
-    return _PLAN_TYPES[type(spec)](spec)
+    global _hits, _misses
+    while True:
+        with _cache_lock:
+            if spec in _cache:
+                _cache.move_to_end(spec)
+                _hits += 1
+                return _cache[spec]
+            ev = _inflight.get(spec)
+            if ev is None:
+                _inflight[spec] = threading.Event()
+                _misses += 1
+                break
+        # another thread is constructing this exact spec: wait for it to
+        # publish (or fail), then retry the lookup
+        ev.wait()
+    try:
+        built = _PLAN_TYPES[type(spec)](spec)
+    except BaseException:
+        with _cache_lock:
+            ev = _inflight.pop(spec)
+        ev.set()        # waiters retry; the next one becomes the builder
+        raise
+    with _cache_lock:
+        _cache[spec] = built
+        while len(_cache) > _CACHE_MAXSIZE:
+            _cache.popitem(last=False)
+        ev = _inflight.pop(spec)
+    ev.set()
+    return built
 
 
 def plan(spec) -> Plan:
     """Build (or fetch from the shared LRU cache) the :class:`Plan` for
     ``spec``. Equal specs return the SAME plan object whose executors are
     bound to already-traced pipelines — the cuFFT ``plan once, exec hot``
-    contract, for every registered operator family."""
+    contract, for every registered operator family. Thread-safe: concurrent
+    misses on one spec construct exactly one plan."""
     if type(spec) not in _PLAN_TYPES:
         known = ", ".join(c.__name__ for c in _PLAN_TYPES) or "none imported"
         raise TypeError(
@@ -126,8 +172,24 @@ def plan(spec) -> Plan:
 
 
 def plan_cache_info():
-    return _plan_cached.cache_info()
+    """``functools``-style cache stats ``(hits, misses, maxsize, currsize)``
+    of the shared plan cache."""
+    with _cache_lock:
+        return functools._CacheInfo(_hits, _misses, _CACHE_MAXSIZE,
+                                    len(_cache))
+
+
+def plan_cache_keys() -> list:
+    """The cached specs, least- to most-recently used — introspection for
+    the serving runtime's bucket admission (which specs are resident/hot)
+    and for cache-contention diagnostics."""
+    with _cache_lock:
+        return list(_cache)
 
 
 def plan_cache_clear():
-    _plan_cached.cache_clear()
+    global _hits, _misses
+    with _cache_lock:
+        _cache.clear()
+        _hits = 0
+        _misses = 0

@@ -15,10 +15,6 @@ restart excluding the node.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable
-
 import jax
 import numpy as np
 from jax.sharding import NamedSharding
@@ -31,22 +27,20 @@ __all__ = ["elastic_restore", "HeartbeatMonitor"]
 
 def elastic_restore(ckpt_dir: str, template, mesh, *, step=None,
                     fsdp: bool = True):
-    """Restore (params, opt_state)-shaped ``template`` onto ``mesh``."""
-    specs = jax.tree_util.tree_map(
-        lambda _: None, template)  # placeholder; params get real specs
+    """Restore (params, opt_state)-shaped ``template`` onto ``mesh``.
+
+    The target mesh is independent of the mesh the checkpoint was written
+    under — storage is unsharded, so restoring onto fewer (or more)
+    devices is the same ``device_put`` re-shard: params and the
+    optimizer's mu/nu follow ``param_specs(mesh)``, the step counter is
+    replicated.
+    """
     p_specs = param_specs(template[0], mesh, fsdp=fsdp)
-    o_specs = (p_specs, p_specs)
 
     def shard_of(spec):
         return NamedSharding(mesh, spec)
 
-    shardings = (
-        jax.tree_util.tree_map(shard_of, p_specs),
-        dataclasses.replace  # opt state: step replicated, mu/nu like params
-    )
-    params_t, opt_t = template
-    restored, meta = restore_checkpoint(ckpt_dir, (params_t, opt_t),
-                                        step=step)
+    restored, meta = restore_checkpoint(ckpt_dir, template, step=step)
     params, opt = restored
     params = jax.tree_util.tree_map(
         lambda l, sp: jax.device_put(l, shard_of(sp)), params, p_specs)

@@ -25,6 +25,13 @@ batched sharded-FFT endpoint backed by the distributed transform.
     PYTHONPATH=src python -m repro.launch.serve --mode fft --fft-dims 2 \
         --fft-rows 256 --fft-cols 512 --batch 8 --fft-shards 4 \
         --fft-decomp slab --ft
+
+    # the multi-tenant serving runtime (repro.serve): spec bucketing +
+    # deadline batching over the plan cache, one string describing plan
+    # geometry AND scheduler policy
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --mode serve \
+        --fft-spec "n=4096,shards=4,workers=2,max_batch=8,deadline_ms=2"
 """
 from __future__ import annotations
 
@@ -88,170 +95,15 @@ def decode(model: Model, params, prompts: jax.Array, gen: int,
     return toks if schedule is None else (toks, stats)
 
 
-def build_fft_spec(shape, *, mesh=None, op: str = "fft",
-                   kernel_shape=None, dims: int | None = None,
-                   decomp: str = "auto", ft: bool = False,
-                   threshold: float = 1e-4, groups: int | None = None,
-                   group_size: int | None = None,
-                   recompute_uncorrectable: bool = True,
-                   natural_order: bool | None = None,
-                   dtype="complex64", real: bool = False,
-                   chunks: int = 1):
-    """Resolve one serving request description into the
-    :class:`~repro.core.fft.api.FFTSpec` its plan is built from.
+# The request-description layer lives in repro.serve.specs (shared with
+# the multi-tenant runtime, repro.serve.runtime); these re-exports keep
+# the historical launch.serve surface working.
+from repro.serve.specs import (SPEC_KEYS as _SPEC_KEYS,  # noqa: E402
+                               _ft_telemetry, _parse_bool, _parse_chunks,
+                               apply_fft_spec_arg, build_fft_spec,
+                               serve_plan)
 
-    ``shape`` is the request batch shape — ``(B, N)`` for 1-D, ``(B, R,
-    C)`` for 2-D. For ``op="convolve"``/``"correlate"`` the spec describes
-    the PADDED transform the spectral pipeline actually runs (last axes
-    padded to a power of two covering the linear result), so one plan
-    serves every request of that operand geometry. ``natural_order=None``
-    resolves the per-op default: the order-agnostic periodogram stays
-    transposed on a mesh (the digit restore is pure waste for ``|X|^2``),
-    everything else is natural. The old serve flags are sugar over this
-    builder — see ``--fft-spec``.
-
-    ``real=True`` (``--fft-spec "real=1"``) declares real-valued request
-    traffic: ``op="fft"`` serves the half-spectrum ``rfft``/``rfft2``
-    executors, ``op="spectrum"`` the one-sided periodogram, and
-    convolve/correlate ride the packed real pipelines — roughly half the
-    C2C collective bytes on a mesh. Real plans are natural-order only.
-
-    ``chunks`` (``--fft-spec "chunks=4"`` or ``"chunks=auto"``) is the
-    multi-transaction overlap knob: the plan splits the batch into that
-    many transactions so each transaction's all-to-all hides behind the
-    next one's local Stockham passes (0 = auto; see
-    :class:`~repro.core.fft.api.FFTSpec`).
-    """
-    from repro.core.fft import api, multidim, spectral
-
-    dims = dims if dims is not None else max(1, len(shape) - 1)
-    if dims not in (1, 2):
-        raise ValueError(f"dims must be 1 or 2, got {dims}")
-    if op not in ("fft", "convolve", "correlate", "spectrum"):
-        raise ValueError(f"op must be fft|convolve|correlate|spectrum, "
-                         f"got {op!r}")
-    if op == "correlate" and dims == 2:
-        raise ValueError("op='correlate' is 1-D only; dims=2 serves "
-                         "fft|convolve|spectrum")
-    if len(shape) != dims + 1:
-        raise ValueError(f"dims={dims} expects a (batch, ...) shape with "
-                         f"{dims} transform axes, got {tuple(shape)}")
-    if real and natural_order is False:
-        raise ValueError("real serve traffic is natural-order only — the "
-                         "half spectrum indexes bins by k (drop "
-                         "transposed=1 or real=1)")
-    sharded = mesh is not None and "fft" in mesh.axis_names \
-        and mesh.shape["fft"] > 1
-    ft_cfg = None
-    if ft and op == "fft":
-        ft_cfg = api.FTConfig(threshold=threshold, groups=groups,
-                              group_size=group_size,
-                              recompute_uncorrectable=recompute_uncorrectable)
-    if op in ("convolve", "correlate"):
-        if kernel_shape is None:
-            raise ValueError(f"op={op!r} needs a kernel")
-        if dims == 1:
-            nfft = spectral._conv_nfft(shape[-1], kernel_shape[-1], mesh,
-                                       "fft")
-            shape = tuple(shape[:-1]) + (nfft,)
-        else:
-            shards = mesh.shape["fft"] if sharded else 1
-            nr = max(spectral._next_pow2(shape[-2] + kernel_shape[-2] - 1),
-                     shards)
-            nc = max(spectral._next_pow2(shape[-1] + kernel_shape[-1] - 1),
-                     shards)
-            shape = tuple(shape[:-2]) + (nr, nc)
-            if real and sharded \
-                    and not multidim.rslab_feasible((nr, nc), shards):
-                decomp = "auto"   # the composed real path covers the rest
-            else:
-                decomp = "slab" if sharded else "auto"
-        natural_order = True
-    elif natural_order is None:
-        # the per-op order default of the legacy endpoint; real spectra
-        # are one-sided (bins indexed by k) and so always natural
-        natural_order = real or not (sharded and op == "spectrum")
-    return api.FFTSpec(shape=tuple(int(s) for s in shape),
-                       dtype=jnp.dtype(dtype).name, rank=dims, mesh=mesh,
-                       axis="fft", decomp="auto" if dims == 1 else decomp,
-                       natural_order=bool(natural_order), ft=ft_cfg,
-                       real=bool(real), chunks=int(chunks))
-
-
-def _ft_telemetry(plan, res, info):
-    """DistFFTResult -> the serve telemetry dict (grouped verdict counts)."""
-    flagged = np.asarray(res.flagged)
-    # the decoded location is only meaningful for correctable (single
-    # data-fault) groups — checksum-row and multi-fault verdicts clip it
-    # to an arbitrary healthy signal, which must not be reported
-    correctable = np.asarray(res.correctable)
-    locs = np.asarray(res.location)
-    info.update(
-        ft=True, groups=plan.groups,
-        group_size=plan.batch // plan.groups,
-        score=float(jnp.max(res.group_score)),
-        flagged=int(flagged.sum()),
-        locations=[int(l) for l, c in zip(locs, correctable) if c],
-        corrected=int(res.corrected),
-        uncorrectable=int(np.asarray(res.uncorrectable).sum()),
-        checksum_faults=int(np.asarray(res.checksum_fault).sum()),
-        recomputed=int(res.recomputed),
-        shard_delta_max=float(jnp.max(res.shard_delta)))
-    return info
-
-
-def serve_plan(plan, x, *, op: str = "fft", kernel=None, mode: str = "same"):
-    """Serve one batched request through a pre-built
-    :class:`~repro.core.fft.api.FFTPlan` — the hot path: every dispatch
-    decision (mesh, decomposition, ABFT groups, digit order) was resolved
-    when the plan was built, so this is a straight executor call plus
-    telemetry assembly. Returns ``(y, info)``.
-    """
-    x = jnp.asarray(x)
-    info = {"shards": plan.shards, "data": plan.dsize, "op": op}
-    if plan.chunks > 1:
-        info["chunks"] = plan.chunks
-    if plan.rank == 2:
-        info["dims"] = 2
-        info["decomp"] = plan.decomp
-    if plan.spec.real:
-        info["real"] = True
-    transposed = (plan.sharded and not plan.spec.natural_order
-                  and (plan.rank == 1 or plan.decomp == "pencil"))
-    if op in ("convolve", "correlate"):
-        if kernel is None:
-            raise ValueError(f"op={op!r} needs a kernel")
-        fn = plan.convolve if op == "convolve" else plan.correlate
-        y = fn(x, kernel, mode=mode)
-        info.update(order="natural",
-                    collectives="2 a2a" if plan.sharded else "local")
-        return y, info
-    if op == "spectrum":
-        y = plan.power_spectrum(x)
-        info["order"] = "transposed" if transposed else "natural"
-        return y, info
-    if op != "fft":
-        raise ValueError(f"op must be fft|convolve|correlate|spectrum, "
-                         f"got {op!r}")
-    xs = plan.shard(x)
-    if plan.spec.ft is not None:
-        res = plan.ft_fft(xs)
-        if not plan.sharded:
-            # single device: the fused-kernel two-side ABFT telemetry
-            flagged = np.asarray(res.flagged)
-            g = int(np.argmax(flagged)) if flagged.any() else -1
-            info.update(
-                ft=True, score=float(jnp.max(res.group_score)),
-                flagged=bool(flagged.any()),
-                location=int(np.asarray(res.location)[g]) if g >= 0 else -1,
-                corrected=int(res.corrected))
-            return res.y, info
-        return res.y, _ft_telemetry(plan, res, info)
-    y = plan.rfft(xs) if plan.spec.real else plan.fft(xs)
-    info.update(ft=False)
-    if plan.sharded:
-        info["order"] = "transposed" if transposed else "natural"
-    return y, info
+SPEC_KEYS = _SPEC_KEYS
 
 
 def serve_fft(x, *, shards: int | None = None, data: int = 1,
@@ -306,72 +158,6 @@ def serve_fft(x, *, shards: int | None = None, data: int = 1,
         recompute_uncorrectable=recompute_uncorrectable,
         natural_order=natural_order, dtype=dt, real=real, chunks=chunks)
     return serve_plan(api.plan(spec), x, op=op, kernel=kernel, mode=mode)
-
-
-def _parse_chunks(v: str) -> int:
-    """``chunks=`` values: a transaction count, or ``auto`` (-> 0, the
-    plan-resolved choice from the collective-volume model)."""
-    if v.strip().lower() == "auto":
-        return 0
-    c = int(v)
-    if c < 0:
-        raise ValueError(f"chunks must be >= 0 (0 = auto), got {c}")
-    return c
-
-
-_SPEC_KEYS = {
-    # --fft-spec "k=v,..." keys -> (argparse dest, parser)
-    "n": ("fft_n", int), "batch": ("batch", int),
-    "shards": ("fft_shards", int), "data": ("fft_data", int),
-    "dims": ("fft_dims", int), "rows": ("fft_rows", int),
-    "cols": ("fft_cols", int), "op": ("fft_op", str),
-    "decomp": ("fft_decomp", str), "ft": ("ft", None),
-    "groups": ("fft_groups", int), "kernel_n": ("fft_kernel_n", int),
-    "transposed": ("transposed", None), "threshold": ("fft_threshold", float),
-    "real": ("fft_real", None), "chunks": ("fft_chunks", _parse_chunks),
-}
-
-
-def _parse_bool(v: str) -> bool:
-    if v.lower() in ("1", "true", "yes", "on", ""):
-        return True
-    if v.lower() in ("0", "false", "no", "off"):
-        return False
-    raise ValueError(f"expected a boolean, got {v!r}")
-
-
-def apply_fft_spec_arg(args, s: str):
-    """Apply a consolidated ``--fft-spec "n=65536,batch=8,shards=4,ft=1"``
-    string onto the parsed args — one flag describing the whole worker
-    plan; the individual ``--fft-*`` flags remain as sugar and provide the
-    defaults the spec string overrides.
-
-    The string is validated strictly: an empty segment (a stray comma, as
-    in ``"n=8,,n=16"``) and a repeated key both raise ``ValueError`` naming
-    the offending segment — a worker must not start from a plan description
-    that silently dropped or last-won half of what the operator wrote."""
-    seen: set[str] = set()
-    for pos, item in enumerate(s.split(","), 1):
-        item = item.strip()
-        if not item:
-            raise ValueError(
-                f"--fft-spec: empty segment at position {pos} of {s!r} — "
-                f"drop the stray comma")
-        k, _, v = item.partition("=")
-        k = k.strip()
-        if k not in _SPEC_KEYS:
-            raise SystemExit(
-                f"--fft-spec: unknown key {k!r} (valid: "
-                f"{', '.join(sorted(_SPEC_KEYS))})")
-        if k in seen:
-            raise ValueError(
-                f"--fft-spec: duplicate key {k!r} (segment {pos}: {item!r} "
-                f"in {s!r}) — each key may appear once; last-wins would "
-                f"silently mask which value the worker plans with")
-        seen.add(k)
-        dest, parse = _SPEC_KEYS[k]
-        setattr(args, dest, _parse_bool(v) if parse is None else parse(v))
-    return args
 
 
 def _main_fft(args):
@@ -452,9 +238,53 @@ def _main_fft(args):
           f"{dt*1e3:.2f}ms/req rel_err={err:.2e}")
 
 
+def _main_serve(args):
+    """Multi-tenant serving worker (``--mode serve``): stand up a
+    :class:`~repro.serve.ServeRuntime` over the mesh, drive it with a
+    short mixed-tenant self-test workload, and print the per-bucket
+    telemetry — the operational smoke of the runtime the benchmark
+    (benchmarks/fft_serving.py) measures properly."""
+    import json
+
+    from repro.launch.mesh import make_fft_mesh
+    from repro.serve import RuntimeConfig, ServeRuntime
+
+    if args.fft_spec:
+        apply_fft_spec_arg(args, args.fft_spec)
+    mesh = make_fft_mesh(args.fft_shards, 1)
+    cfg = RuntimeConfig(
+        max_batch=args.serve_max_batch, deadline_ms=args.serve_deadline_ms,
+        queue_depth=args.serve_queue_depth, workers=args.serve_workers,
+        timeout_ms=args.serve_timeout_ms, chunks=max(args.fft_chunks, 1))
+    rng = np.random.default_rng(0)
+    n = args.fft_n
+    t0 = time.time()
+    with ServeRuntime(cfg, mesh=mesh if mesh.shape.get("fft", 1) > 1
+                      else None) as rt:
+        handles = []
+        for i in range(args.serve_requests):
+            # mixed tenants: off-grid sizes, three request kinds
+            sz = (n, max(2, n - n // 4), max(2, n // 2 + 1))[i % 3]
+            x = rng.standard_normal(sz).astype(np.float32)
+            kind = i % 4
+            kw = ({"op": "fft"}, {"op": "spectrum"},
+                  {"op": "fft", "real": True},
+                  {"op": "fft", "ft": True})[kind if not args.ft else 3]
+            handles.append(rt.submit(x, **kw))
+        for h in handles:
+            h.result(timeout=300.0)
+        stats = rt.stats()
+    dt = time.time() - t0
+    print(f"# served {len(handles)} requests in {dt:.2f}s "
+          f"({len(handles) / dt:.0f} rps) over "
+          f"{dict(mesh.shape) if mesh is not None else 'single device'}")
+    print(json.dumps(stats["buckets"], indent=2, sort_keys=True))
+    print(f"# plan cache: {stats['plan_cache']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="lm", choices=["lm", "fft"])
+    ap.add_argument("--mode", default="lm", choices=["lm", "fft", "serve"])
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
     ap.add_argument("--batch", type=int, default=4)
@@ -498,6 +328,25 @@ def main():
                          "overrides the individual --fft-* flags — the "
                          "worker builds ONE FFTPlan from it at startup")
     ap.add_argument("--fft-iters", type=int, default=5)
+    ap.add_argument("--serve-workers", type=int, default=2,
+                    help="serve mode: executor worker threads (sharded "
+                         "dispatch is serialized on the mesh lock; extra "
+                         "workers overlap batch assembly/scatter)")
+    ap.add_argument("--serve-max-batch", type=int, default=8,
+                    help="serve mode: coalescing limit = the bucket plans' "
+                         "batch dimension")
+    ap.add_argument("--serve-deadline-ms", type=float, default=2.0,
+                    help="serve mode: max time a request waits for batch "
+                         "companions before its partial batch closes")
+    ap.add_argument("--serve-queue-depth", type=int, default=64,
+                    help="serve mode: bounded pending-request queue "
+                         "(backpressure: overflow is rejected, not "
+                         "buffered)")
+    ap.add_argument("--serve-timeout-ms", type=float, default=None,
+                    help="serve mode: fail requests unbatched past this "
+                         "age (default: never)")
+    ap.add_argument("--serve-requests", type=int, default=64,
+                    help="serve mode: self-test workload size")
     ap.add_argument("--transposed", action="store_true",
                     help="keep fft/spectrum output in transposed digit order")
     ap.add_argument("--fft-real", action="store_true",
@@ -518,6 +367,9 @@ def main():
 
     if args.mode == "fft":
         _main_fft(args)
+        return
+    if args.mode == "serve":
+        _main_serve(args)
         return
 
     cfg = (get_config if args.preset == "full" else get_smoke_config)(

@@ -1,0 +1,166 @@
+"""Plan-cache thread safety: concurrent plan() misses construct exactly one
+plan object per spec — no duplicate construction, no duplicate jit traces.
+
+Closes the EXPERIMENTS.md open question on plan-cache contention under
+concurrent serving requests: the shared LRU's miss path is guarded by
+per-spec in-flight events (repro.core.plan), so a worker pool hammering
+``plan()`` on identical specs gets ONE plan (and one set of traced
+pipelines), while distinct specs still build concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import plan as planbase
+from repro.core.fft import api
+
+
+def _hammer(fn, threads: int):
+    """Run ``fn(i)`` from ``threads`` threads through a start barrier so the
+    calls genuinely race; returns the per-thread results."""
+    barrier = threading.Barrier(threads)
+    results = [None] * threads
+    errors = []
+
+    def worker(i):
+        try:
+            barrier.wait()
+            results[i] = fn(i)
+        except BaseException as e:          # pragma: no cover - fail path
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors
+    return results
+
+
+@dataclasses.dataclass(frozen=True)
+class _RaceSpec:
+    """Test-only spec whose plan construction is slow enough to expose the
+    lost-update race lru_cache had on the miss path."""
+
+    tag: int
+
+
+class _RacePlan(planbase.Plan):
+    builds: list[int] = []
+
+    def __init__(self, spec):
+        super().__init__(spec)
+        _RacePlan.builds.append(spec.tag)
+        time.sleep(0.05)      # hold the miss open across every racer
+
+
+@pytest.fixture
+def race_registry():
+    planbase.register_plan_type(_RaceSpec, _RacePlan)
+    _RacePlan.builds = []
+    yield
+    planbase._PLAN_TYPES.pop(_RaceSpec, None)
+    planbase.plan_cache_clear()
+
+
+def test_identical_spec_hammer_builds_exactly_once(race_registry):
+    spec = _RaceSpec(tag=7)
+    results = _hammer(lambda i: planbase.plan(spec), threads=16)
+    assert _RacePlan.builds == [7], \
+        f"plan constructed {len(_RacePlan.builds)} times under the race"
+    assert all(r is results[0] for r in results), \
+        "threads observed distinct plan objects for one spec"
+
+
+def test_distinct_specs_hammer_builds_one_each(race_registry):
+    # 4 distinct specs x 8 threads each: one construction per spec, every
+    # thread of a spec sees the same object
+    results = _hammer(lambda i: planbase.plan(_RaceSpec(tag=i % 4)),
+                      threads=32)
+    assert sorted(_RacePlan.builds) == [0, 1, 2, 3]
+    for tag in range(4):
+        group = [r for r in results if r.spec.tag == tag]
+        assert all(r is group[0] for r in group)
+
+
+def test_distinct_specs_build_concurrently(race_registry):
+    # the miss-path guard is per-spec, not a single global build lock: 4
+    # distinct specs each sleeping 50 ms must overlap, not serialize
+    t0 = time.perf_counter()
+    _hammer(lambda i: planbase.plan(_RaceSpec(tag=100 + i)), threads=4)
+    assert time.perf_counter() - t0 < 0.15, \
+        "distinct-spec constructions serialized behind one lock"
+
+
+def test_failed_build_retries_and_does_not_poison(race_registry):
+    @dataclasses.dataclass(frozen=True)
+    class _FlakySpec:
+        tag: int
+
+    calls = []
+
+    class _FlakyPlan(planbase.Plan):
+        def __init__(self, spec):
+            calls.append(1)
+            if len(calls) == 1:
+                raise RuntimeError("transient build failure")
+            super().__init__(spec)
+
+    planbase.register_plan_type(_FlakySpec, _FlakyPlan)
+    try:
+        with pytest.raises(RuntimeError, match="transient"):
+            planbase.plan(_FlakySpec(tag=0))
+        # the failure must not leave a stuck in-flight entry behind
+        p = planbase.plan(_FlakySpec(tag=0))
+        assert isinstance(p, _FlakyPlan)
+    finally:
+        planbase._PLAN_TYPES.pop(_FlakySpec, None)
+        planbase.plan_cache_clear()
+
+
+def test_fft_spec_hammer_one_plan_no_retrace(crand):
+    """The real thing: N threads planning one FFTSpec get the identical
+    FFTPlan, the cache records exactly one miss for it, and dispatching
+    from every thread adds zero jit traces beyond the first call."""
+    api.plan_cache_clear()
+    spec = api.FFTSpec(shape=(4, 256), dtype="complex64")
+    results = _hammer(lambda i: api.plan(spec), threads=12)
+    p = results[0]
+    assert all(r is p for r in results)
+    info = api.plan_cache_info()
+    assert info.misses == 1 and info.hits == 11
+    assert spec in api.plan_cache_keys()
+
+    x = crand(4, 256)
+    y0 = np.asarray(p.fft(x))                  # first call traces
+
+    def dispatch(i):
+        return np.asarray(api.plan(spec).fft(x))
+
+    for y in _hammer(dispatch, threads=8):
+        np.testing.assert_array_equal(y, y0)
+    assert api.plan_cache_info().misses == 1, "dispatch re-missed the cache"
+
+
+def test_cache_keys_and_info_shapes():
+    api.plan_cache_clear()
+    s1 = api.FFTSpec(shape=(2, 64))
+    s2 = api.FFTSpec(shape=(2, 128))
+    p1, p2 = api.plan(s1), api.plan(s2)
+    assert api.plan(s1) is p1 and api.plan(s2) is p2
+    keys = api.plan_cache_keys()
+    # LRU order: s2 was planned after s1, then s1/s2 re-hit in order
+    assert keys[-1] == s2 and s1 in keys
+    info = api.plan_cache_info()
+    assert info.currsize == 2 and info.maxsize == 512
+    api.plan_cache_clear()
+    assert api.plan_cache_info().currsize == 0
+    assert api.plan_cache_keys() == []
