@@ -1,0 +1,137 @@
+"""Collective-op parser for post-partitioning HLO text.
+
+Promoted from ``launch/dryrun.collective_bytes`` so the plan auditor, the
+dry-run pipeline, and the distributed-FFT benchmark all read one parser.
+This module imports nothing but the stdlib — in particular no ``jax`` —
+because ``launch/dryrun`` mutates ``XLA_FLAGS`` at import time and the
+auditor must be importable before jax picks a platform.
+
+The module under inspection is the per-device program (lowered with a
+``jax.sharding.Mesh``), so every byte count here is per-device wire
+traffic. Async ``-start`` ops return ``(operand buffers..., result
+buffers...)`` tuples; only the result half is transferred, so those are
+deduped. All-reduce wire bytes carry the ring factor 2 (reduce-scatter +
+all-gather phases); every other kind moves its payload once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["CollectiveOp", "COLLECTIVE_KINDS", "DTYPE_BYTES", "WIRE_FACTOR",
+           "parse_collectives", "summarize", "root_signature"]
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(.*?\)|[a-z0-9\[\]{},\s/]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|c64|c128)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+# wire-bytes multiplier per collective kind (ring algorithms)
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+# ENTRY %main.123 (arg0: c64[8,256]) -> (c64[8,256], f32[3]) {
+ENTRY_RE = re.compile(r"^ENTRY\s+\S+\s*\(.*\)\s*->\s*(.*?)\s*\{?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective in program order.
+
+    ``shapes`` is the result buffer list as ``(dtype, elems)`` pairs
+    (post ``-start`` dedupe), ``payload_bytes`` their byte total, and
+    ``wire_bytes`` the per-device wire traffic (payload x ring factor).
+    """
+
+    kind: str
+    is_async: bool
+    shapes: tuple[tuple[str, int], ...]
+    payload_bytes: int
+    wire_bytes: float
+
+    @property
+    def dtypes(self) -> tuple[str, ...]:
+        return tuple(dt for dt, _ in self.shapes)
+
+    @property
+    def elems(self) -> int:
+        return sum(n for _, n in self.shapes)
+
+
+def _result_shapes(line: str, op: str, *, is_start: bool):
+    # result type sits between ' = ' and the op name:
+    #   %x = f32[64,128]{1,0} all-reduce(...)
+    #   %y = (f32[8]{0}, f32[8]{0}) all-gather-start(...)
+    # Async ``-start`` results are (operand buffers..., result buffers...)
+    # tuples — the operand aliases duplicate the payload, so only the result
+    # half of the tuple is transferred. Sync decomposed all-to-alls also
+    # return tuples, but there every element IS payload: no dedupe.
+    seg = line.split(" = ", 1)[1] if " = " in line else line
+    seg = seg.split(op, 1)[0]
+    shapes = []
+    for m in SHAPE_RE.finditer(seg):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        shapes.append((dt, n))
+    if is_start and len(shapes) > 1:
+        shapes = shapes[len(shapes) // 2:]
+    return tuple(shapes)
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    """All collectives in ``hlo_text``, program order, as structured
+    records — kind, async-ness, per-buffer (dtype, elems), payload and
+    wire bytes. This is the one classification point; every summary view
+    (:func:`summarize`, ``launch.dryrun.collective_bytes``) derives from
+    it."""
+    ops = []
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        is_async = m.group(2) is not None
+        shapes = _result_shapes(line, kind, is_start=is_async)
+        payload = sum(n * DTYPE_BYTES[dt] for dt, n in shapes)
+        ops.append(CollectiveOp(kind=kind, is_async=is_async, shapes=shapes,
+                                payload_bytes=payload,
+                                wire_bytes=payload * WIRE_FACTOR[kind]))
+    return ops
+
+
+def summarize(ops: list[CollectiveOp]) -> dict:
+    """The legacy ``collective_bytes`` dict view of structured records:
+    per-kind wire ``bytes`` / ``count``, program-order ``(kind, wire)``
+    ``ops`` pairs, and the scalar ``total_bytes``."""
+    out = {k: 0.0 for k in WIRE_FACTOR}
+    count = {k: 0 for k in WIRE_FACTOR}
+    pairs = []
+    for op in ops:
+        out[op.kind] += op.wire_bytes
+        count[op.kind] += 1
+        pairs.append((op.kind, op.wire_bytes))
+    return {"bytes": out, "count": count, "ops": pairs,
+            "total_bytes": float(sum(out.values()))}
+
+
+def root_signature(hlo_text: str) -> tuple[str, ...]:
+    """Dtype tokens of the ENTRY computation's result, in order.
+
+    ``ENTRY %main (...) -> (c64[8,256], f32[3])`` yields ``("c64", "f32")``.
+    Used by the auditor's downcast check: a ``complex128`` spec whose root
+    signature carries ``c64`` buffers silently lost half its mantissa.
+    Returns ``()`` when no ENTRY line parses (caller should not fail)."""
+    for line in hlo_text.splitlines():
+        m = ENTRY_RE.match(line.strip())
+        if m:
+            return tuple(mm.group(1) for mm in SHAPE_RE.finditer(m.group(1)))
+    return ()

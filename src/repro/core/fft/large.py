@@ -67,7 +67,8 @@ def fft_large(x: jax.Array, plan: Plan | None = None) -> jax.Array:
     n = x.shape[-1]
     if plan is None:
         plan = make_plan(n)
-    assert plan.n == n
+    if plan.n != n:
+        raise ValueError(f"plan is for n={plan.n}, input has n={n}")
     y = _fft_factors(x, plan.kernel_factors, plan.inverse)
     if plan.inverse:
         y = y / n

@@ -175,7 +175,8 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
     Natural order is FREE (the output sharding lands on the last transform
     axis — no digit restore, zero all-gathers), so ``natural_order`` does
     not change the slab model. The grouped verdict psum is identical to
-    the 1-D model: ``3*groups/data_shards + 1`` real scalars at ring
+    the 1-D model: ``3*groups/data_shards + 1`` verdict scalars plus the
+    ``5*groups/data_shards``-real replicated-stats broadcast, at ring
     factor 2.
 
     **pencil**: TWO all-to-alls (one per mesh axis; one when
@@ -229,9 +230,22 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
         rows = (batch + (2 * groups if ft else 0)) / dd
         a2a_hlo = rows * grid * itemsize / d
         a2a_wire = a2a_hlo * (d - 1) / d
-        psum_scalars = 3 * groups // dd + 1
-        psum_hlo = 2.0 * psum_scalars * (itemsize // 2) if ft else 0.0
+        # per-group verdict scalars + one energy scalar, plus the stats
+        # extraction: grouped pipelines broadcast ONE stacked (G/dd, 5)-
+        # real block, the ungrouped pipeline reduces its native scalars
+        # (3 predicates + score real + s32 location) — same structure the
+        # 1-D model counts; the plan auditor's per-kind psum diff pinned
+        # both terms down here too
+        verdict = (3 * groups // dd + 1) * (itemsize // 2)
+        stats = (5 * groups // dd * (itemsize // 2) if groups > 1
+                 else 3 + (itemsize // 2) + 4)
+        psum_hlo = 2.0 * (verdict + stats) if ft else 0.0
         psum_wire = psum_hlo * (d - 1) / d
+        # stats extraction on a batch-sharded mesh: one data-axis
+        # collective-permute of the 5*groups/dd-real block (see the 1-D
+        # model)
+        permute_hlo = (5 * groups // dd * (itemsize // 2)
+                       if ft and dd > 1 else 0.0)
         gather_hlo = gather_wire = 0.0
         a2a_count, gather_count = 1, 0
         local_bytes = rows * grid * itemsize / d
@@ -246,7 +260,7 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
         a2a_wire = local * (d - 1) / d
         if dd > 1:
             a2a_wire += local * (dd - 1) / dd
-        psum_hlo = psum_wire = 0.0
+        psum_hlo = psum_wire = permute_hlo = 0.0
         full = float(batch * grid * itemsize)
         if natural_order:
             gather_hlo = full + (full / dd if dd > 1 else 0.0)
@@ -271,10 +285,13 @@ def collective_volume_nd(shape: tuple[int, ...], batch: int, fft_shards: int,
         "all_gather_count": gather_count,
         "all_to_all_bytes": a2a_hlo,
         "all_to_all_wire": a2a_wire,
+        "gather_hlo": gather_hlo,
         "gather_wire": gather_wire,
+        "psum_hlo": psum_hlo,
         "psum_wire": psum_wire,
-        "total_wire": a2a_wire + gather_wire + psum_wire,
-        "hlo_bytes": a2a_hlo + gather_hlo + psum_hlo,
+        "permute_hlo": permute_hlo,
+        "total_wire": a2a_wire + gather_wire + psum_wire + permute_hlo,
+        "hlo_bytes": a2a_hlo + gather_hlo + psum_hlo + permute_hlo,
         "local_bytes": local_bytes,
         "abft_overhead": 2.0 * groups / batch if (ft and batch) else 0.0,
     }

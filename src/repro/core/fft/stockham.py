@@ -71,7 +71,10 @@ def _fft_recursive(x: jax.Array, stages, inverse: bool) -> jax.Array:
 
 def fft_with_plan(x: jax.Array, plan: Plan) -> jax.Array:
     """Single-pass (VMEM-sized) FFT following ``plan.stages[0]``."""
-    assert plan.num_passes == 1, "use large.fft_large for multi-pass plans"
+    if plan.num_passes != 1:
+        raise ValueError(f"fft_with_plan is single-pass, got "
+                         f"num_passes={plan.num_passes} — use "
+                         f"large.fft_large for multi-pass plans")
     y = _fft_recursive(x, list(plan.stages[0]), plan.inverse)
     if plan.inverse:
         y = y / plan.n

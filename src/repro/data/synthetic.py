@@ -30,7 +30,9 @@ def make_batch(seed: int, step: int, *, batch: int, seq_len: int,
                vocab_size: int, shard: int = 0, num_shards: int = 1,
                dtype=np.int32) -> dict:
     """Pure function (seed, step, shard) -> {"tokens", "labels"}."""
-    assert batch % num_shards == 0
+    if batch % num_shards != 0:
+        raise ValueError(f"batch={batch} is not divisible by "
+                         f"num_shards={num_shards}")
     local = batch // num_shards
     rng = np.random.default_rng(
         np.random.SeedSequence([seed, step, shard]))

@@ -146,13 +146,19 @@ def abft_fft_pallas(
     if plan is None:
         plan = make_plan(n, batch=b, itemsize=xr.dtype.itemsize,
                          inverse=inverse)
-    assert plan.num_passes == 1, plan.describe()
+    if plan.num_passes != 1:
+        raise ValueError(
+            f"abft_fft_pallas is single-pass; got {plan.describe()} — "
+            f"compose larger sizes at the JAX level (ops.ft_fft)")
     stages = plan.stages[0]
     if bs is None:
         bs = min(plan.bs, b)
-    assert b % bs == 0, (b, bs)
+    if b % bs != 0:
+        raise ValueError(f"batch {b} is not divisible by tile size bs={bs}")
     tiles = b // bs
-    assert tiles % transactions == 0, (tiles, transactions)
+    if tiles % transactions != 0:
+        raise ValueError(f"tiles={tiles} (batch {b} / bs={bs}) is not "
+                         f"divisible by transactions={transactions}")
     groups = tiles // transactions
 
     np_dtype = np.float64 if xr.dtype == jnp.float64 else np.float32

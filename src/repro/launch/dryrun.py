@@ -17,7 +17,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 
@@ -57,65 +56,32 @@ CANONICAL = {
     "whisper_base": "whisper-base",
 }
 
-COLLECTIVE_RE = re.compile(
-    r"=\s*(?:\(.*?\)|[a-z0-9\[\]{},\s/]*?)\s*"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(-start)?\(")
-SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|c64|c128)"
-                      r"\[([0-9,]*)\]")
-DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-               "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
-# wire-bytes multiplier per collective kind (ring algorithms)
-WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
-               "all-to-all": 1.0, "collective-permute": 1.0}
+# The collective parser lives in repro.analysis.hlo (import-light, shared
+# with the plan auditor); these names stay importable here for callers that
+# predate the move.
+from repro.analysis import hlo as _hlo
+from repro.analysis.hlo import (COLLECTIVE_RE, DTYPE_BYTES,  # noqa: F401
+                                SHAPE_RE, WIRE_FACTOR)
 
 
 def _shape_bytes(line: str, op: str, *, is_start: bool = False) -> int:
-    # result type sits between ' = ' and the op name:
-    #   %x = f32[64,128]{1,0} all-reduce(...)
-    #   %y = (f32[8]{0}, f32[8]{0}) all-gather-start(...)
-    # Async ``-start`` results are (operand buffers..., result buffers...)
-    # tuples — the operand aliases duplicate the payload, so only the result
-    # half of the tuple is transferred. Sync decomposed all-to-alls also
-    # return tuples, but there every element IS payload: no dedupe.
-    seg = line.split(" = ", 1)[1] if " = " in line else line
-    seg = seg.split(op, 1)[0]
-    sizes = []
-    for m in SHAPE_RE.finditer(seg):
-        dt, dims = m.group(1), m.group(2)
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        sizes.append(n * DTYPE_BYTES[dt])
-    if is_start and len(sizes) > 1:
-        sizes = sizes[len(sizes) // 2:]
-    return sum(sizes)
+    """Payload bytes of one collective's result buffers (compat shim over
+    :func:`repro.analysis.hlo._result_shapes`)."""
+    shapes = _hlo._result_shapes(line, op, is_start=is_start)
+    return sum(n * DTYPE_BYTES[dt] for dt, n in shapes)
 
 
 def collective_bytes(hlo_text: str) -> dict:
     """Per-device wire bytes by collective kind, parsed from the
     post-partitioning HLO (the module is the per-device program).
 
-    Returns ``bytes`` / ``count`` keyed by kind, the scalar ``total_bytes``,
-    and ``ops`` — one ``(kind, wire_bytes)`` entry per collective in program
-    order, so callers can reason about individual transactions (e.g. the
-    exposed-communication fraction of a chunked pipeline)."""
-    out = {k: 0.0 for k in WIRE_FACTOR}
-    count = {k: 0 for k in WIRE_FACTOR}
-    ops = []
-    for line in hlo_text.splitlines():
-        m = COLLECTIVE_RE.search(line)
-        if not m:
-            continue
-        kind = m.group(1)
-        b = _shape_bytes(line, kind, is_start=m.group(2) is not None)
-        wire = b * WIRE_FACTOR[kind]
-        out[kind] += wire
-        count[kind] += 1
-        ops.append((kind, wire))
-    return {"bytes": out, "count": count, "ops": ops,
-            "total_bytes": float(sum(out.values()))}
+    Thin compat wrapper over :func:`repro.analysis.hlo.parse_collectives`
+    preserving the historical dict shape: ``bytes`` / ``count`` keyed by
+    kind, the scalar ``total_bytes``, and ``ops`` — one ``(kind,
+    wire_bytes)`` entry per collective in program order, so callers can
+    reason about individual transactions (e.g. the exposed-communication
+    fraction of a chunked pipeline)."""
+    return _hlo.summarize(_hlo.parse_collectives(hlo_text))
 
 
 # ---------------------------------------------------------------------------

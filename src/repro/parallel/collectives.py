@@ -48,7 +48,9 @@ def compress_allreduce_mean(grads: Any, residual: Any, mesh: Mesh,
     with the mean replicated along the replica axis.
     """
     n_ranks = int(np.prod([mesh.shape[a] for a in axes]))
-    assert n_ranks <= 256, "int16 accumulation bound"
+    if n_ranks > 256:
+        raise ValueError(f"int16 accumulation bounds the reduction to 256 "
+                         f"ranks, got {n_ranks} over axes {axes}")
 
     def one(g, r):
         def reduce_fn(gl, rl):

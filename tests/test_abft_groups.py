@@ -87,12 +87,13 @@ def test_collective_volume_grouped():
     assert g4["abft_overhead"] == pytest.approx(8 / b)
     assert g4["all_to_all_wire"] == pytest.approx(
         plain["all_to_all_wire"] * (b + 8) / b)
-    # psum payload: (8G + 1) real scalars at ring factor 2 — the 5G
-    # stats-broadcast term is the masked all-reduce XLA emits for the
-    # replicated telemetry extraction (the traffic the old model hid
-    # behind an absolute 512-byte slack floor)
+    # psum payload at ring factor 2: grouped = (8G + 1) f32 scalars (the
+    # 5G stats-broadcast term is the masked all-reduce XLA emits for the
+    # replicated telemetry extraction); ungrouped = 4 f32 verdict scalars
+    # + native-scalar stats (3 pred + f32 score + s32 location = 11B) —
+    # per-kind HLO diffs in repro.analysis pinned down both layouts
     assert g4["psum_wire"] - g1["psum_wire"] == pytest.approx(
-        2.0 * 24 * 4 * (d - 1) / d)
+        2.0 * (33 * 4 - (4 * 4 + 11)) * (d - 1) / d)
     # data sharding divides rows, gather, and per-device verdict scalars
     half = collective_volume(n, b, d, ft=True, groups=4, data_shards=2)
     assert half["all_to_all_wire"] == pytest.approx(

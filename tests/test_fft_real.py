@@ -186,8 +186,10 @@ def test_collective_volume_nd_real_model():
     assert real["hlo_bytes"] / c2c["hlo_bytes"] == pytest.approx(cp / cc)
     assert real["hlo_bytes"] <= 0.6 * c2c["hlo_bytes"]
     ft = collective_volume_nd((rr, cc), b, d, ft=True, groups=4, real=True)
+    # psum: (3G+1) verdict scalars + the 5G replicated-stats broadcast,
+    # f32 (the auditor pins this against the lowered HLO)
     assert ft["hlo_bytes"] == pytest.approx(
-        (b + 8) * rr * cp * 8 / d + 2 * (3 * 4 + 1) * 4)
+        (b + 8) * rr * cp * 8 / d + 2 * (3 * 4 + 1 + 5 * 4) * 4)
     with pytest.raises(ValueError, match="slab-only"):
         collective_volume_nd((rr, cc), b, d, decomp="pencil", real=True)
 

@@ -83,10 +83,12 @@ def test_spectral_volume_model():
 
 
 def test_collective_volume_psum_tracks_itemsize():
-    """The ABFT verdict traffic is 8 scalars per checksum group (3
-    verdict-psum + 5 replicated-stats broadcast) plus one shared energy
+    """The grouped ABFT verdict traffic is 8 scalars per checksum group
+    (3 verdict-psum + 5 replicated-stats broadcast) plus one shared energy
     scalar, in the input's REAL dtype: f64 for complex128 — the model must
-    scale with both the group count and the itemsize."""
+    scale with both the group count and the itemsize. The UNGROUPED
+    pipeline reduces its native stats scalars instead: 3 predicate flags
+    (1B), the score in the real dtype, and an s32 location."""
     from repro.core.fft.distributed import collective_volume
 
     n, b, d = 1 << 14, 8, 4
@@ -99,8 +101,9 @@ def test_collective_volume_psum_tracks_itemsize():
                                   itemsize=itemsize)
         return ft["hlo_bytes"] - plain["hlo_bytes"]
 
-    assert psum_bytes(8) == pytest.approx(2.0 * 9 * 4)
-    assert psum_bytes(16) == pytest.approx(2.0 * 9 * 8)  # pre-fix: f32-sized
+    assert psum_bytes(8) == pytest.approx(2.0 * (4 * 4 + 3 + 4 + 4))
+    # pre-fix the verdict+score were f32-sized under complex128:
+    assert psum_bytes(16) == pytest.approx(2.0 * (4 * 8 + 3 + 8 + 4))
     assert psum_bytes(8, groups=4) == pytest.approx(2.0 * 33 * 4)
     # grouped + data-sharded: each device psums only its own groups' stats
     half = collective_volume(n, b, d, ft=True, natural_order=False,
